@@ -1,0 +1,104 @@
+"""Paper Figs. 7–9: system cost of DRLGO / PTOM / GM / RM under dynamic
+user states (user count ramp, association ramp, mobility) on the three
+synthetic citation datasets, + cross-server communication cost (the (d)
+panels).
+
+DRLGO and PTOM are trained briefly (quick mode) on the dynamic-scenario
+protocol of §6.4 before evaluation; each method is evaluated ``repeats``
+times and averaged, as in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import costs
+from repro.core.dynamic_graph import random_scenario
+from repro.core.offload.baselines import run_greedy, run_random
+from repro.core.offload.drlgo import DRLGOTrainer, DRLGOTrainerConfig
+from repro.core.offload.env import OBS_DIM
+from repro.core.offload.ppo import PPOConfig, PTOMAgent
+from repro.data.graphs import DATASETS, make_graph, sample_subgraph
+
+M = 4
+
+
+def _scenario_from_dataset(name: str, n_users: int, n_assoc: int,
+                           capacity: int, seed: int):
+    spec = DATASETS[name]
+    g = make_graph(spec, seed=seed % 7)          # cache-friendly small pool
+    sub = sample_subgraph(g, min(n_users, g.num_vertices),
+                          n_assoc, seed=seed)
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0, 2000, size=(sub.num_vertices, 2))
+    from repro.core.dynamic_graph import make_graph_state
+    return make_graph_state(capacity, pos, sub.edges, sub.task_sizes_kb())
+
+
+def run(quick: bool = True) -> None:
+    caps = 64 if quick else 320
+    user_axis = [24, 48] if quick else [50, 100, 150, 200, 250, 300]
+    assoc_axis = [60, 120] if quick else [300, 600, 900, 1200, 1500, 1800]
+    episodes = 60 if quick else 400
+    datasets = ["synth-citeseer"] if quick else list(DATASETS)
+
+    # train DRLGO + PTOM once on the dynamic protocol, seeded from the
+    # dataset-derived scenario distribution (paper: sampled PubMed docs)
+    init_sc = _scenario_from_dataset(datasets[0], user_axis[-1],
+                                     assoc_axis[-1], caps, seed=0)
+    tcfg = DRLGOTrainerConfig(capacity=caps, n_users=user_axis[-1],
+                              n_assoc=assoc_axis[-1], episodes=episodes,
+                              n_servers=M, warmup_steps=256, cost_scale=1.0,
+                              initial_scenario=init_sc)
+    tr = DRLGOTrainer(tcfg)
+    t_train = timeit(lambda: tr.train(), repeats=1)
+    emit("fig7_drlgo_train", t_train, f"episodes={episodes}")
+    ptom = PTOMAgent(PPOConfig(state_dim=M * OBS_DIM, n_actions=M))
+    for _ in range(episodes):
+        env = tr.make_env(tr.scenario)
+        ptom.run_episode(env)
+
+    def eval_methods(tag, scenario, repeats=3):
+        drlgo = np.mean([tr.evaluate(scenario)["system_cost"]
+                         for _ in range(1)])
+        env_costs = {
+            "drlgo": drlgo,
+            "ptom": np.mean([ptom.run_episode(tr.make_env(scenario),
+                                              learn=False, explore=False)
+                             ["system_cost"] for _ in range(1)]),
+            "gm": run_greedy(tr.make_env(scenario))["system_cost"],
+            "rm": np.mean([run_random(tr.make_env(scenario), seed=s)
+                           ["system_cost"] for s in range(repeats)]),
+        }
+        cross = {
+            "drlgo": tr.evaluate(scenario)["cross_bits"],
+            "gm": run_greedy(tr.make_env(scenario))["cross_bits"],
+        }
+        for k, v in env_costs.items():
+            emit(f"{tag}_{k}", 0.0, f"system_cost={v:.3f}")
+        emit(f"{tag}_crossbits", 0.0,
+             f"drlgo={cross['drlgo']:.0f};gm={cross['gm']:.0f};"
+             f"reduction={1 - cross['drlgo'] / max(cross['gm'], 1):.2%}")
+
+    for ds in datasets:
+        for n in user_axis:                          # Fig 7/8/9 (a)
+            sc = _scenario_from_dataset(ds, n, 3 * n, caps, seed=n)
+            eval_methods(f"fig789_{ds}_users{n}", sc)
+        for e in assoc_axis:                         # Fig 7/8/9 (b)
+            sc = _scenario_from_dataset(ds, user_axis[-1], e, caps, seed=e)
+            eval_methods(f"fig789_{ds}_assoc{e}", sc)
+        # (c): mobility — same users, positions shuffled per step
+        rng = np.random.default_rng(0)
+        sc = _scenario_from_dataset(ds, user_axis[-1], assoc_axis[-1],
+                                    caps, seed=1)
+        from repro.core.dynamic_graph import move_users
+        import jax.numpy as jnp
+        for t in range(2 if quick else 10):
+            newp = rng.uniform(0, 2000, (caps, 2)).astype(np.float32)
+            sc = move_users(sc, jnp.asarray(newp))
+            eval_methods(f"fig789_{ds}_move_t{t}", sc, repeats=2)
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv)

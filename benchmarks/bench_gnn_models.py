@@ -1,0 +1,68 @@
+"""Paper Fig. 10: system cost across GNN models (GCN, GAT, GraphSAGE, SGC)
+on each dataset, plus the pre-trained models' node-classification accuracy
+(the paper requires the 60–80% band).
+
+The GNN model enters the cost model through the per-layer feature sizes
+S_κ (Eqs. 10–11): SGC collapses to a single linear map, the others carry a
+64-d hidden layer.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import costs
+from repro.core.offload.baselines import run_greedy
+from repro.core.offload.drlgo import DRLGOTrainer, DRLGOTrainerConfig
+from repro.data.graphs import DATASETS, make_graph, sample_subgraph
+from repro.gnn.models import pretrain
+
+# per-model GNN layer feature sizes (kb per vertex; cap 1500 per paper)
+MODEL_LAYERS = {
+    "gcn": (1500.0, 64.0, 8.0),
+    "gat": (1500.0, 64.0, 8.0),
+    "graphsage": (1500.0, 64.0, 8.0),
+    "sgc": (1500.0, 8.0),
+}
+
+
+def run(quick: bool = True) -> None:
+    n_users = 32 if quick else 300
+    n_assoc = 3 * n_users if quick else 4800
+    episodes = 20 if quick else 300
+    datasets = ["synth-cora"] if quick else list(DATASETS)
+    models = list(MODEL_LAYERS)
+
+    tcfg = DRLGOTrainerConfig(capacity=n_users, n_users=n_users,
+                              n_assoc=n_assoc, episodes=episodes,
+                              warmup_steps=256, cost_scale=1.0)
+    tr = DRLGOTrainer(tcfg)
+    tr.train()
+
+    for ds in datasets:
+        spec = DATASETS[ds]
+        g = make_graph(spec, seed=0)
+        sub = sample_subgraph(g, min(400, g.num_vertices), 4 * n_users,
+                              seed=0)
+        for model in models:
+            served, stats = pretrain(model, sub,
+                                     steps=40 if quick else 120)
+            gnn_params = costs.GNNCostParams(
+                layer_sizes_kb=MODEL_LAYERS[model])
+            env = tr.make_env(tr.scenario)
+            env.gnn = gnn_params
+            env.__post_init__()
+            drlgo = tr.run_episode(env, explore=False, learn=False)
+            env2 = tr.make_env(tr.scenario)
+            env2.gnn = gnn_params
+            env2.__post_init__()
+            gm = run_greedy(env2)
+            emit(f"fig10_{ds}_{model}", 0.0,
+                 f"drlgo_cost={drlgo['system_cost']:.2f};"
+                 f"gm_cost={gm['system_cost']:.2f};"
+                 f"acc={stats['acc_test']:.2f}")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv)

@@ -1,0 +1,52 @@
+"""Paper Fig. 6: HiCut vs iterated max-flow min-cut ([36]) — wall time and
+cut quality on sparse / non-sparse random graphs.
+
+Paper sizes: 500–20 000 vertices (sparse E ≈ 10V, non-sparse E ≈ 1000V+),
+25 servers for the baseline. Quick mode trims sizes so the whole bench
+suite stays fast; --full reproduces the paper's axis.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core.hicut import cut_metrics, hicut_ref
+from repro.core.mincut_baseline import pairwise_mincut_partition
+from repro.data.graphs import random_graph
+
+
+def run(quick: bool = True) -> None:
+    if quick:
+        sparse = [(500, 5_010), (2_000, 20_040), (4_000, 40_080)]
+        dense = [(500, 50_100), (1_000, 200_100), (2_000, 400_100)]
+        servers = 9
+    else:  # paper axis
+        sparse = [(500, 5_010), (5_000, 200_010), (10_000, 400_020),
+                  (20_000, 800_040)]
+        dense = [(500, 500_100), (5_000, 2_000_100), (10_000, 4_000_200),
+                 (20_000, 8_000_400)]
+        servers = 25
+    rng = np.random.default_rng(0)
+    for label, cases in (("sparse", sparse), ("nonsparse", dense)):
+        for n, e in cases:
+            g = random_graph(n, e, seed=int(rng.integers(1 << 30)))
+            weights = rng.integers(1, 101, g.num_edges)
+            t_hicut = timeit(lambda: hicut_ref(n, g.edges), repeats=1)
+            a_hicut = hicut_ref(n, g.edges)
+            m_hicut = cut_metrics(n, g.edges, a_hicut)
+            t_mincut = timeit(lambda: pairwise_mincut_partition(
+                n, g.edges, weights, servers), repeats=1)
+            a_mincut = pairwise_mincut_partition(n, g.edges, weights,
+                                                 servers)
+            m_mincut = cut_metrics(n, g.edges, a_mincut)
+            emit(f"fig6_hicut_{label}_v{n}_e{e}", t_hicut,
+                 f"cut_frac={m_hicut['cut_fraction']:.3f};"
+                 f"subgraphs={m_hicut['num_subgraphs']}")
+            emit(f"fig6_mincut36_{label}_v{n}_e{e}", t_mincut,
+                 f"cut_frac={m_mincut['cut_fraction']:.3f};"
+                 f"speedup_hicut={t_mincut / max(t_hicut, 1):.1f}x")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv)

@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks (XLA path wall-clock on CPU; the Pallas kernels
+target TPU and are validated in interpret mode by the test suite — CPU
+wall time of interpret mode is not meaningful, so we time the jnp/XLA
+reference path and report the kernels' VMEM working sets as derived)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.gnn_aggregate.ops import normalized_aggregate
+from repro.kernels.chunk_scan.ops import ssd_chunk_scan
+
+
+def run(quick: bool = True) -> None:
+    rng = np.random.default_rng(0)
+
+    # gnn_aggregate
+    n, f = (512, 128) if quick else (4096, 512)
+    adj = jnp.asarray((rng.random((n, n)) < 0.05).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+    scale = jnp.ones((n,), jnp.float32)
+    fn = jax.jit(lambda a, x_: normalized_aggregate(a, x_, scale, scale))
+    fn(adj, x).block_until_ready()
+    t = timeit(lambda: fn(adj, x).block_until_ready())
+    emit(f"kernel_gnn_aggregate_n{n}_f{f}", t,
+         f"vmem_tile=128x128x128;flops={2 * n * n * f:.0f}")
+
+    # flash attention
+    b, h, kv, s, dh = (1, 4, 2, 1024, 64) if quick else (2, 8, 2, 4096, 128)
+    q = jnp.asarray(rng.normal(size=(b, h, s, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, kv, s, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, kv, s, dh)).astype(np.float32))
+    fa = jax.jit(lambda q_, k_, v_: flash_attention(q_, k_, v_))
+    fa(q, k, v).block_until_ready()
+    t = timeit(lambda: fa(q, k, v).block_until_ready())
+    emit(f"kernel_flash_attention_s{s}_dh{dh}", t,
+         f"blocks=128x128;vmem_scratch={4 * (128 + 128 + 128 * dh)}B")
+
+    # ssd chunk scan
+    b2, s2, h2, p2, n2 = (2, 512, 4, 64, 64) if quick else (4, 2048, 8, 64, 64)
+    xx = jnp.asarray(rng.normal(size=(b2, s2, h2, p2)).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(b2, s2, n2)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(b2, s2, n2)).astype(np.float32))
+    la = -jnp.asarray(rng.random((b2, s2, h2)).astype(np.float32))
+    sc = jax.jit(lambda *a: ssd_chunk_scan(*a))
+    sc(xx, bm, cm, la).block_until_ready()
+    t = timeit(lambda: sc(xx, bm, cm, la).block_until_ready())
+    emit(f"kernel_ssd_scan_s{s2}_h{h2}", t,
+         f"chunk=128;state_vmem={p2 * n2 * 4}B")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv)

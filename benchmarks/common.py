@@ -1,0 +1,19 @@
+"""Shared benchmark plumbing: CSV emission + quick/full mode."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, repeats: int = 3) -> float:
+    """Median wall time of fn() in microseconds."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,31 @@
+"""Benchmark entry: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV. ``--full`` reproduces paper-scale axes."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    from benchmarks import (bench_ablation, bench_convergence,
+                            bench_distributed_gnn, bench_dynamic_cost,
+                            bench_gnn_models, bench_hicut, bench_kernels)
+    for mod in (bench_hicut, bench_kernels, bench_distributed_gnn,
+                bench_dynamic_cost, bench_gnn_models, bench_convergence,
+                bench_ablation):
+        name = mod.__name__.split(".")[-1]
+        t = time.time()
+        try:
+            mod.run(quick=quick)
+            print(f"# {name} done in {time.time() - t:.1f}s")
+        except Exception as exc:      # keep the suite going, but loudly
+            print(f"# {name} FAILED: {exc!r}")
+            raise
+    print(f"# total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Distributed GNN serving over a virtual device mesh.
+
+    PYTHONPATH=src python examples/distributed_gnn_serving.py [--devices 4]
+
+The serving-side realization of GraphEdge on a TPU-style mesh: edge
+servers → mesh devices, HiCut partition → vertex placement, message
+passing → halo-exchange all-gathers. Pre-trains a GCN on a synthetic
+citation graph, then serves batched node-classification requests with the
+shard_map inference path and reports accuracy + ICI bytes (HiCut vs
+random placement).
+
+NOTE: sets XLA_FLAGS before importing jax — run as a script, not import.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--devices", type=int, default=4)
+ap.add_argument("--vertices", type=int, default=260)
+ap.add_argument("--requests", type=int, default=3)
+args = ap.parse_args()
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+
+import jax                                    # noqa: E402
+import numpy as np                            # noqa: E402
+from jax.sharding import Mesh                 # noqa: E402
+
+from repro.core.hicut import hicut_ref        # noqa: E402
+from repro.data.graphs import CORA, make_graph, sample_subgraph  # noqa
+from repro.gnn.distributed import (make_partition_plan,          # noqa
+                                   distributed_gcn_forward)
+from repro.gnn.models import pretrain         # noqa: E402
+
+
+def main() -> None:
+    p = args.devices
+    g = make_graph(CORA, seed=0)
+    sub = sample_subgraph(g, args.vertices, 6 * args.vertices, seed=0)
+    print(f"graph: {sub.num_vertices} vertices, {sub.num_edges} edges")
+
+    model, stats = pretrain("gcn", sub, steps=80)
+    print(f"pre-trained GCN: train acc {stats['acc_train']:.2f}, "
+          f"test acc {stats['acc_test']:.2f} (paper band: 0.60-0.80)")
+
+    adj = sub.adjacency()
+    mesh = Mesh(np.array(jax.devices()[:p]), ("servers",))
+    rng = np.random.default_rng(0)
+
+    for name, assign in (
+            ("hicut", hicut_ref(sub.num_vertices, sub.edges) % p),
+            ("random", rng.integers(0, p, sub.num_vertices))):
+        plan = make_partition_plan(adj, assign, p)
+        out = None
+        for req in range(args.requests):      # batched request loop
+            out = distributed_gcn_forward(mesh, "servers", plan,
+                                          model.params, sub.features)
+        acc = (out.argmax(-1) == sub.labels).mean()
+        print(f"[{name:6s}] halo rows/device: {plan.halo:4d}   "
+              f"bytes/aggregation: {plan.bytes_per_aggregate(model.hidden):8d}"
+              f"   serve acc: {acc:.2f}")
+
+
+if __name__ == "__main__":
+    main()

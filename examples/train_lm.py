@@ -1,0 +1,77 @@
+"""Train a reduced assigned-architecture LM on synthetic tokens.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-0.6b --steps 50
+    PYTHONPATH=src python examples/train_lm.py --arch mixtral-8x7b \
+        --steps 20 --d-model 128            # any of the 10 archs works
+
+Exercises the same model stack the multi-pod dry-run lowers (reduced dims
+on CPU) — data pipeline → train_step (AdamW) → checkpoint. Loss should
+drop visibly within a few dozen steps on the structured synthetic stream.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs.registry import get_config, list_archs
+from repro.data.tokens import TokenDataConfig, token_batches
+from repro.models import transformer as T
+from repro.models.config import reduced
+from repro.optim.adamw import AdamWConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch), d_model=args.d_model,
+                  layers=args.layers)
+    print(f"{cfg.name}: ~{cfg.param_count() / 1e6:.1f}M-param family "
+          f"config reduced to d_model={cfg.d_model}")
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    opt = T.init_opt(params)
+    step = jax.jit(T.make_train_step(cfg, AdamWConfig(lr=args.lr)))
+
+    data = token_batches(TokenDataConfig(vocab_size=cfg.vocab_size,
+                                         seq_len=args.seq,
+                                         batch_size=args.batch))
+    extras = {}
+    if cfg.num_prefix_tokens and cfg.prefix_dim:
+        extras["prefix_emb"] = 0.02 * jax.random.normal(
+            key, (args.batch, cfg.num_prefix_tokens, cfg.prefix_dim))
+    if cfg.encoder_stages:
+        extras["frames"] = 0.02 * jax.random.normal(
+            key, (args.batch, cfg.encoder_seq_len, cfg.prefix_dim))
+
+    t0 = time.time()
+    first = last = None
+    for i, batch in zip(range(args.steps), data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()} | extras
+        params, opt, m = step(params, opt, batch)
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        last = loss
+        if (i + 1) % max(args.steps // 10, 1) == 0:
+            print(f"step {i + 1:4d}  loss {loss:.4f}")
+    print(f"\nloss {first:.3f} → {last:.3f} in {args.steps} steps "
+          f"({time.time() - t0:.1f}s)")
+    if args.ckpt:
+        ckpt.save(args.ckpt, params)
+        print(f"params saved to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Flat-npz checkpointing for arbitrary pytrees (no orbax offline).
+
+Keys encode the tree path; restore requires a matching ``like`` pytree, which
+keeps it safe across refactors (shape/dtype mismatches fail loudly).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "|"
+
+
+def _flatten_with_paths(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten_with_paths(tree))
+
+
+def restore(path: str, like: Any) -> Any:
+    with np.load(path) as data:
+        stored = dict(data)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = SEP.join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        if key not in stored:
+            raise KeyError(f"checkpoint missing key {key!r}")
+        arr = stored[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,23 @@
+"""deepseek-v2-lite-16b [moe]: 27L d_model=2048 16H d_ff=1408
+vocab=102400 — MLA kv_lora=512, 2 shared + 64 routed experts top-6,
+first layer dense FFN. The assignment's primary spec line (64e top-6) is
+followed; V2-Lite's dense first-layer FFN is 10944. [arXiv:2405.04434]"""
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+def config() -> ModelConfig:
+    first = LayerSpec(mixer="mla", ffn="dense")
+    moe = LayerSpec(mixer="mla", ffn="moe")
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", arch_type="moe",
+        d_model=2048, vocab_size=102400,
+        num_heads=16, num_kv_heads=16, head_dim=128,
+        d_ff=10944, moe_d_ff=1408,
+        kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128,
+        num_experts=64, num_experts_per_tok=6, num_shared_experts=2,
+        rope_theta=10000.0,
+        stages=(Stage(unit=(first,), reps=1),
+                Stage(unit=(moe,), reps=26)),
+        long_context_ok=True,    # MLA rank-512 cache; decode O(S)/token
+        source="arXiv:2405.04434",
+    )

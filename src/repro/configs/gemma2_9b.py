@@ -1,0 +1,21 @@
+"""gemma2-9b [dense]: 42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000 — alternating local(4096)/global layers, logit softcaps,
+pre+post RMSNorm, sqrt(d) embed scale. [arXiv:2408.00118]"""
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+def config() -> ModelConfig:
+    local = LayerSpec(mixer="attn", ffn="dense", window=4096,
+                      post_norm=True)
+    glob = LayerSpec(mixer="attn", ffn="dense", window=None,
+                     post_norm=True)
+    return ModelConfig(
+        name="gemma2-9b", arch_type="dense",
+        d_model=3584, vocab_size=256000,
+        num_heads=16, num_kv_heads=8, head_dim=256,
+        d_ff=14336, attn_logit_softcap=50.0, final_logit_softcap=30.0,
+        embed_scale=True, rope_theta=10000.0,
+        stages=(Stage(unit=(local, glob), reps=21),),
+        long_context_ok=True,    # local layers SWA; global decode is O(S)
+        source="arXiv:2408.00118",
+    )

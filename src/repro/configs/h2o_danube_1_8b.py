@@ -1,0 +1,17 @@
+"""h2o-danube-1.8b [dense]: 24L d_model=2560 32H (GQA kv=8) d_ff=6912
+vocab=32000 — llama+mistral mix, sliding-window attention.
+[arXiv:2401.16818]"""
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="h2o-danube-1.8b", arch_type="dense",
+        d_model=2560, vocab_size=32000,
+        num_heads=32, num_kv_heads=8, head_dim=80,
+        d_ff=6912, rope_theta=10000.0,
+        stages=(Stage(unit=(LayerSpec(mixer="attn", ffn="dense",
+                                      window=4096),), reps=24),),
+        long_context_ok=True,    # native SWA
+        source="arXiv:2401.16818",
+    )

@@ -1,0 +1,20 @@
+"""internvl2-26b [vlm]: 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92553 — InternViT vision frontend STUBBED per the assignment:
+input_specs() provides projected patch embeddings prepended to text.
+[arXiv:2404.16821]"""
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-26b", arch_type="vlm",
+        d_model=6144, vocab_size=92553,
+        num_heads=48, num_kv_heads=8, head_dim=128,
+        d_ff=16384, rope_theta=1e6,
+        stages=(Stage(unit=(LayerSpec(mixer="attn", ffn="dense"),),
+                      reps=48),),
+        num_prefix_tokens=256,   # one tile of ViT patches (stub)
+        prefix_dim=3200,         # InternViT-6B embedding dim (stub)
+        long_context_ok=False,   # pure full attention (DESIGN.md skip)
+        source="arXiv:2404.16821",
+    )

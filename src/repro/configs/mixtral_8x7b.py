@@ -1,0 +1,18 @@
+"""mixtral-8x7b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000, 8 experts top-2, SWA. [arXiv:2401.04088]"""
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b", arch_type="moe",
+        d_model=4096, vocab_size=32000,
+        num_heads=32, num_kv_heads=8, head_dim=128,
+        d_ff=14336, moe_d_ff=14336,
+        num_experts=8, num_experts_per_tok=2,
+        rope_theta=1e6,
+        stages=(Stage(unit=(LayerSpec(mixer="attn", ffn="moe",
+                                      window=4096),), reps=32),),
+        long_context_ok=True,    # native SWA
+        source="arXiv:2401.04088",
+    )

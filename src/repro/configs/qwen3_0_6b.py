@@ -1,0 +1,16 @@
+"""qwen3-0.6b [dense]: 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936 — qk_norm, GQA. [hf:Qwen/Qwen3-8B family card]"""
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-0.6b", arch_type="dense",
+        d_model=1024, vocab_size=151936,
+        num_heads=16, num_kv_heads=8, head_dim=128,
+        d_ff=3072, qk_norm=True, rope_theta=1e6,
+        stages=(Stage(unit=(LayerSpec(mixer="attn", ffn="dense"),),
+                      reps=28),),
+        long_context_ok=False,   # pure full attention (DESIGN.md skip table)
+        source="hf:Qwen/Qwen3-8B",
+    )

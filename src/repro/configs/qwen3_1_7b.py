@@ -1,0 +1,16 @@
+"""qwen3-1.7b [dense]: 28L d_model=2048 16H (GQA kv=8) d_ff=6144
+vocab=151936 — qk_norm, GQA. [hf:Qwen/Qwen3-8B family card]"""
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-1.7b", arch_type="dense",
+        d_model=2048, vocab_size=151936,
+        num_heads=16, num_kv_heads=8, head_dim=128,
+        d_ff=6144, qk_norm=True, rope_theta=1e6,
+        stages=(Stage(unit=(LayerSpec(mixer="attn", ffn="dense"),),
+                      reps=28),),
+        long_context_ok=False,
+        source="hf:Qwen/Qwen3-8B",
+    )

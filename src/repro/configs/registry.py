@@ -1,0 +1,36 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+One module per assigned architecture (exact numbers from the assignment,
+source cited in each config's ``source`` field), plus the paper's own GNN
+scenario configs (``graphedge_*``).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "qwen3-0.6b",
+    "deepseek-v2-lite-16b",
+    "h2o-danube-1.8b",
+    "seamless-m4t-large-v2",
+    "zamba2-2.7b",
+    "gemma2-9b",
+    "mixtral-8x7b",
+    "internvl2-26b",
+    "qwen3-1.7b",
+    "rwkv6-7b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str):
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {ARCHS}")
+    return importlib.import_module(_module_name(arch_id)).config()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

@@ -1,0 +1,16 @@
+"""rwkv6-7b [ssm]: 32L d_model=4096 (attention-free) d_ff=14336
+vocab=65536 — Finch, data-dependent decay, time-mix + channel-mix.
+[arXiv:2404.05892]"""
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-7b", arch_type="ssm",
+        d_model=4096, vocab_size=65536,
+        d_ff=14336, rwkv_head_dim=64,
+        stages=(Stage(unit=(LayerSpec(mixer="rwkv6", ffn="rwkv_cm"),),
+                      reps=32),),
+        long_context_ok=True,    # O(1) recurrent state
+        source="arXiv:2404.05892",
+    )

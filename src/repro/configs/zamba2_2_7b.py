@@ -1,0 +1,22 @@
+"""zamba2-2.7b [hybrid]: 54L d_model=2560, Mamba2 backbone (ssm_state=64)
+with interleaved attention blocks (32H kv=32, d_ff=10240 MLP).
+Pattern: 9 × (5 mamba2 + 1 attention) = 54 layers. Zamba2 shares the
+attention block weights globally; we keep per-repetition weights
+(DESIGN.md notes the deviation). [arXiv:2411.15242]"""
+from repro.models.config import LayerSpec, ModelConfig, Stage
+
+
+def config() -> ModelConfig:
+    m = LayerSpec(mixer="mamba2", ffn="none")
+    a = LayerSpec(mixer="attn", ffn="dense")
+    return ModelConfig(
+        name="zamba2-2.7b", arch_type="hybrid",
+        d_model=2560, vocab_size=32000,
+        num_heads=32, num_kv_heads=32, head_dim=80,
+        d_ff=10240,
+        ssm_state=64, ssm_headdim=64, ssm_expand=2,
+        rope_theta=10000.0,
+        stages=(Stage(unit=(m, m, m, m, m, a), reps=9),),
+        long_context_ok=True,    # Mamba2 state; attn blocks windowed at 500k
+        source="arXiv:2411.15242",
+    )

@@ -1,0 +1,175 @@
+"""Dynamic graph model (paper §3.2).
+
+The EC controller perceives the user topology as a graph layout
+``G(t) = (V(t), E(t))``. Users have three kinds of dynamics: position
+changes, count changes (join/leave), association changes. Following the
+paper, the layout has a fixed capacity ``N`` with a **mask module** (an
+array of length N, 1 = active user) plus per-vertex **position attributes**;
+leaving users zero their mask slot and drop their edges, joining users
+re-activate zeroed slots.
+
+Everything is fixed-shape jnp, so the whole perceive → HiCut → offload
+pipeline can live under jit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GraphState(NamedTuple):
+    """Graph layout G(t) with the paper's mask/position extensions."""
+    mask: jnp.ndarray      # [N] f32 in {0,1}; the paper's mask module
+    pos: jnp.ndarray       # [N, 2] f32; user coordinates (x_i(t), y_i(t))
+    adj: jnp.ndarray       # [N, N] f32 in {0,1}; e_ij, symmetric, no self-loops
+    task_kb: jnp.ndarray   # [N] f32; task data size X_i(t) in kilobits
+
+    @property
+    def capacity(self) -> int:
+        return self.mask.shape[0]
+
+    def num_active(self) -> jnp.ndarray:
+        return jnp.sum(self.mask)
+
+    def degrees(self) -> jnp.ndarray:
+        """|N_i(t)|: number of active neighbors of each active user."""
+        return (self.adj @ self.mask) * self.mask
+
+
+def _symmetrize(adj: jnp.ndarray) -> jnp.ndarray:
+    adj = jnp.maximum(adj, adj.T)
+    n = adj.shape[0]
+    return adj * (1.0 - jnp.eye(n, dtype=adj.dtype))
+
+
+def _apply_mask(state: GraphState) -> GraphState:
+    """Drop edges incident to inactive vertices (paper: 'their associations
+    with other vertices will be removed')."""
+    m = state.mask
+    adj = state.adj * m[:, None] * m[None, :]
+    return state._replace(adj=adj, task_kb=state.task_kb * m)
+
+
+def make_graph_state(capacity: int, positions, edges, task_kb,
+                     active: int | None = None) -> GraphState:
+    """Build a GraphState from numpy inputs, padding to ``capacity``."""
+    positions = np.asarray(positions, np.float32)
+    n = positions.shape[0]
+    active = n if active is None else active
+    assert n <= capacity
+    mask = np.zeros(capacity, np.float32)
+    mask[:active] = 1.0
+    pos = np.zeros((capacity, 2), np.float32)
+    pos[:n] = positions
+    adj = np.zeros((capacity, capacity), np.float32)
+    for i, j in np.asarray(edges, np.int64).reshape(-1, 2):
+        if i != j:
+            adj[i, j] = adj[j, i] = 1.0
+    kb = np.zeros(capacity, np.float32)
+    kb[:n] = np.asarray(task_kb, np.float32)
+    state = GraphState(jnp.asarray(mask), jnp.asarray(pos), jnp.asarray(adj),
+                       jnp.asarray(kb))
+    return _apply_mask(state)
+
+
+# ---------------------------------------------------------------------------
+# dynamic events (all jit-able, fixed shape)
+# ---------------------------------------------------------------------------
+
+def move_users(state: GraphState, new_pos: jnp.ndarray) -> GraphState:
+    """Position change: sync vertex position attributes to user locations."""
+    pos = jnp.where(state.mask[:, None] > 0, new_pos, state.pos)
+    return state._replace(pos=pos)
+
+
+def remove_users(state: GraphState, drop: jnp.ndarray) -> GraphState:
+    """drop: [N] {0,1}. Mask slots go to 0 and their edges are removed."""
+    mask = state.mask * (1.0 - drop)
+    return _apply_mask(state._replace(mask=mask))
+
+
+def add_users(state: GraphState, add: jnp.ndarray, pos: jnp.ndarray,
+              task_kb: jnp.ndarray, adj_new: jnp.ndarray) -> GraphState:
+    """add: [N] {0,1} marks previously-inactive slots to activate; new
+    vertices take the given positions / task sizes / association rows."""
+    add = add * (1.0 - state.mask)                 # only inactive slots
+    mask = jnp.clip(state.mask + add, 0.0, 1.0)
+    posn = jnp.where(add[:, None] > 0, pos, state.pos)
+    kb = jnp.where(add > 0, task_kb, state.task_kb)
+    touched = jnp.maximum(add[:, None], add[None, :])
+    adj = jnp.where(touched > 0, _symmetrize(adj_new), state.adj)
+    return _apply_mask(GraphState(mask, posn, adj, kb))
+
+
+def rewire(state: GraphState, adj_new: jnp.ndarray) -> GraphState:
+    """Association change: replace E with new edges (masked + symmetrized)."""
+    return _apply_mask(state._replace(adj=_symmetrize(adj_new)))
+
+
+# ---------------------------------------------------------------------------
+# random scenario / event sampling (numpy; drives training + benchmarks)
+# ---------------------------------------------------------------------------
+
+def random_scenario(rng: np.random.Generator, capacity: int, n_users: int,
+                    n_assoc: int, plane: float = 2000.0,
+                    task_kb_range=(500.0, 1500.0)) -> GraphState:
+    """Random EC scenario on a plane×plane area (paper §6.1: 2000m×2000m)."""
+    pos = rng.uniform(0, plane, size=(n_users, 2))
+    max_e = n_users * (n_users - 1) // 2
+    n_assoc = min(n_assoc, max_e)
+    have: set[tuple[int, int]] = set()
+    while len(have) < n_assoc:
+        i, j = rng.integers(n_users), rng.integers(n_users)
+        if i != j:
+            have.add((min(i, j), max(i, j)))
+    edges = np.array(sorted(have), np.int64) if have else np.zeros((0, 2),
+                                                                   np.int64)
+    kb = rng.uniform(*task_kb_range, size=n_users)
+    return make_graph_state(capacity, pos, edges, kb, active=n_users)
+
+
+def perturb_scenario(rng: np.random.Generator, state: GraphState,
+                     change_rate: float = 0.2,
+                     plane: float = 2000.0) -> GraphState:
+    """Paper Fig. 4/§6.4: each episode randomly changes user count,
+    associations and positions (default 20% change rate)."""
+    n = state.capacity
+    mask = np.asarray(state.mask)
+    # positions: all users drift
+    new_pos = np.asarray(state.pos) + rng.normal(0, 0.05 * plane, (n, 2))
+    state = move_users(state, jnp.asarray(
+        np.clip(new_pos, 0, plane).astype(np.float32)))
+    # membership: flip ~change_rate of slots
+    flips = rng.random(n) < change_rate * 0.5
+    drop = (flips & (mask > 0)).astype(np.float32)
+    state = remove_users(state, jnp.asarray(drop))
+    grow = (flips & (mask == 0)).astype(np.float32)
+    if grow.any():
+        pos = rng.uniform(0, plane, (n, 2)).astype(np.float32)
+        kb = rng.uniform(500, 1500, n).astype(np.float32)
+        adj = np.asarray(state.adj).copy()
+        active = np.asarray(state.mask) + grow
+        for i in np.nonzero(grow)[0]:
+            cand = np.nonzero(active)[0]
+            cand = cand[cand != i]
+            if len(cand):
+                friends = rng.choice(cand, size=min(3, len(cand)),
+                                     replace=False)
+                adj[i, friends] = adj[friends, i] = 1.0
+        state = add_users(state, jnp.asarray(grow), jnp.asarray(pos),
+                          jnp.asarray(kb), jnp.asarray(adj))
+    # associations: rewire ~change_rate of edges among active users
+    adj = np.asarray(state.adj).copy()
+    mask = np.asarray(state.mask)
+    act = np.nonzero(mask)[0]
+    if len(act) >= 2:
+        e_idx = np.transpose(np.nonzero(np.triu(adj)))
+        for i, j in e_idx:
+            if rng.random() < change_rate:
+                adj[i, j] = adj[j, i] = 0.0
+                a, b = rng.choice(act, 2, replace=False)
+                adj[a, b] = adj[b, a] = 1.0
+    return rewire(state, jnp.asarray(adj.astype(np.float32)))

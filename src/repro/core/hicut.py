@@ -1,0 +1,211 @@
+"""HiCut — hierarchical traversal graph cut (paper §4, Algorithm 1).
+
+Two implementations with identical semantics:
+
+* ``hicut_ref`` — numpy adjacency-list transcription of Algorithm 1,
+  line-for-line. O(N² + NE) total (LayerCut is a BFS, invoked from every
+  still-unassigned vertex). Used for large benchmark graphs (Fig. 6) and as
+  the oracle for the JAX version.
+* ``hicut_jax`` — fixed-shape jit-able version operating on a masked dense
+  adjacency matrix (the :class:`~repro.core.dynamic_graph.GraphState`
+  layout). BFS layers are frontier masks; the layer-boundary decision logic
+  (lines 20–36) is branchless ``jnp.where``. One ``lax.while_loop`` per
+  LayerCut, driven by a ``lax.fori_loop`` over seed vertices.
+
+Semantics notes (faithful to the pseudocode, documented where it is loose):
+
+* ``d_n`` counts, for every vertex of the current BFS layer, its incident
+  edges toward vertices not yet in any subgraph (intra-layer edges therefore
+  count twice — once per endpoint — exactly as the ref loop does).
+* A layer where ``d_n < d_{n-1}`` becomes the cut candidate ``V_seg``; its
+  vertices stay *uncommitted* until either associations strengthen again
+  (``d_{n-1} ≤ d_n`` with non-empty ``V_seg`` and strict increase → commit
+  ``V_seg`` and cut, line 28–29) or the frontier dies (``d_n == 0`` → commit
+  ``V_seg`` ∪ current layer, line 22–23).
+* On equality (``d_{n-1} == d_n``) with a pending ``V_seg`` the pseudocode
+  commits only the current layer and leaves ``V_seg`` pending; we reproduce
+  that verbatim.
+* Vertices left pending when the queue empties are *not* committed; they
+  seed later LayerCut calls (outer loop, lines 2–4), so every active vertex
+  still ends in exactly one subgraph.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# reference implementation (Algorithm 1, numpy / adjacency lists)
+# ---------------------------------------------------------------------------
+
+def _adjacency_lists(n: int, edges: np.ndarray) -> list[np.ndarray]:
+    nbrs: list[list[int]] = [[] for _ in range(n)]
+    for i, j in edges:
+        nbrs[i].append(j)
+        nbrs[j].append(i)
+    return [np.array(sorted(x), np.int64) for x in nbrs]
+
+
+def hicut_ref(n: int, edges: np.ndarray,
+              active: np.ndarray | None = None) -> np.ndarray:
+    """Run Algorithm 1. Returns [n] int64 subgraph ids (−1 for inactive)."""
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    nbrs = _adjacency_lists(n, edges)
+    active = np.ones(n, bool) if active is None else np.asarray(active, bool)
+    assigned = np.full(n, -1, np.int64)   # membership in G_sub
+    sub_id = 0
+
+    def layer_cut(v_begin: int, sid: int) -> None:
+        # line 8: initialize variables
+        from collections import deque
+        q = deque([v_begin])
+        visited = np.zeros(n, bool)
+        visited[v_begin] = True
+        assigned[v_begin] = sid                     # line 9: V_begin → G_subc
+        n_cur, l_cur = 1, 1
+        v_cur: list[int] = []
+        v_seg: list[int] = []
+        d_prev = d_n = 0
+        while q:                                    # line 11
+            vc = q.popleft()                        # lines 12-14
+            v_cur.append(vc)
+            n_cur -= 1
+            for vr in nbrs[vc]:                     # line 15
+                if active[vr] and assigned[vr] < 0:  # line 16: not in G_sub
+                    d_n += 1                        # line 17
+                    if not visited[vr]:             # line 18
+                        visited[vr] = True
+                        q.append(vr)                # line 19
+            if n_cur == 0:                          # line 20: layer boundary
+                n_cur = len(q)                      # line 21
+                if d_n == 0:                        # lines 22-23
+                    for v in v_seg + v_cur:
+                        assigned[v] = sid
+                    return
+                if l_cur == 1:                      # lines 24-25
+                    d_prev = d_n
+                else:
+                    if d_prev <= d_n:               # line 27
+                        if v_seg and d_prev < d_n:  # lines 28-29: cut here
+                            for v in v_seg:
+                                assigned[v] = sid
+                            return
+                        d_prev = d_n                # line 31
+                        for v in v_cur:
+                            assigned[v] = sid
+                    else:                           # line 32: d_prev > d_n
+                        for v in v_seg:             # lines 33-34
+                            assigned[v] = sid
+                        v_seg = list(v_cur)         # line 35
+                        d_prev = d_n                # line 36
+                l_cur += 1                          # line 37
+                v_cur = []
+                d_n = 0
+
+    for v in range(n):                              # lines 2-4
+        if active[v] and assigned[v] < 0:
+            layer_cut(v, sub_id)
+            sub_id += 1
+    return assigned
+
+
+# ---------------------------------------------------------------------------
+# JAX implementation (fixed shape, jit-able)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=())
+def hicut_jax(adj: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Fixed-shape HiCut. adj [N,N] {0,1} symmetric, mask [N] {0,1}.
+
+    Returns [N] int32 subgraph ids (−1 for masked-out vertices). Matches
+    ``hicut_ref`` exactly (tested property-wise and pointwise).
+    """
+    n = adj.shape[0]
+    adjb = (adj > 0) & (mask[:, None] > 0) & (mask[None, :] > 0)
+
+    def layer_cut(assigned, seed, sid):
+        frontier = jnp.zeros(n, bool).at[seed].set(True)
+        visited = frontier
+        assigned = jnp.where(frontier, sid, assigned)      # line 9
+        vseg = jnp.zeros(n, bool)
+        # carry: (assigned, frontier, visited, vseg, d_prev, l_cur, done)
+        def cond(c):
+            _, frontier, _, _, _, l_cur, done = c
+            return (~done) & jnp.any(frontier) & (l_cur <= n)
+
+        def body(c):
+            assigned, frontier, visited, vseg, d_prev, l_cur, done = c
+            unassigned = (assigned < 0) & (mask > 0)
+            # d_n: edges from current layer to not-in-G_sub vertices
+            d_n = jnp.sum(jnp.where(frontier[:, None] & adjb
+                                    & unassigned[None, :], 1, 0))
+            nxt = (adjb.T @ frontier.astype(jnp.int32) > 0)
+            nxt = nxt & unassigned & ~visited              # lines 16-19
+            first = l_cur == 1
+            zero = d_n == 0
+            inc = (~first) & (d_prev <= d_n)
+            cut_now = inc & jnp.any(vseg) & (d_prev < d_n)  # lines 28-29
+            dec = (~first) & (d_prev > d_n)
+            # lines 22-23: commit vseg ∪ current layer, exit
+            commit_zero = jnp.where(zero, vseg | frontier, False)
+            # lines 28-29: commit vseg, exit (only if not zero-case)
+            commit_cut = jnp.where(cut_now & ~zero, vseg, False)
+            # line 31: commit current layer, continue
+            commit_inc = jnp.where(inc & ~cut_now & ~zero, frontier, False)
+            # lines 33-34: commit pending vseg, continue (vseg := layer)
+            commit_dec = jnp.where(dec & ~zero, vseg, False)
+            commit = commit_zero | commit_cut | commit_inc | commit_dec
+            assigned = jnp.where(commit, sid, assigned)
+            exit_now = zero | (cut_now & ~zero)
+            vseg = jnp.where(dec & ~zero & ~exit_now, frontier,
+                             jnp.where(commit_cut.any() | zero,
+                                       jnp.zeros(n, bool), vseg))
+            d_prev = jnp.where(first | inc | dec, d_n, d_prev)
+            visited = visited | nxt
+            frontier = jnp.where(exit_now, jnp.zeros(n, bool), nxt)
+            return (assigned, frontier, visited, vseg, d_prev, l_cur + 1,
+                    done | exit_now)
+
+        init = (assigned, frontier, visited, vseg, jnp.zeros((), jnp.int32),
+                jnp.ones((), jnp.int32), jnp.zeros((), bool))
+        out = jax.lax.while_loop(cond, body, init)
+        return out[0]
+
+    def outer(i, carry):
+        assigned, sid = carry
+        todo = (assigned[i] < 0) & (mask[i] > 0)
+        assigned = jax.lax.cond(
+            todo, lambda a: layer_cut(a, i, sid), lambda a: a, assigned)
+        return assigned, sid + jnp.where(todo, 1, 0)
+
+    assigned0 = jnp.full(n, -1, jnp.int32)
+    assigned, _ = jax.lax.fori_loop(0, n, outer, (assigned0,
+                                                  jnp.zeros((), jnp.int32)))
+    return assigned
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def cut_metrics(n: int, edges: np.ndarray, assigned: np.ndarray) -> dict:
+    """Partition quality: cross-subgraph edge count / fraction, #subgraphs."""
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    a = np.asarray(assigned)
+    valid = (a[edges[:, 0]] >= 0) & (a[edges[:, 1]] >= 0)
+    e = edges[valid]
+    cross = int(np.sum(a[e[:, 0]] != a[e[:, 1]]))
+    ids = np.unique(a[a >= 0])
+    sizes = np.array([(a == s).sum() for s in ids])
+    return {
+        "num_subgraphs": int(len(ids)),
+        "cross_edges": cross,
+        "total_edges": int(len(e)),
+        "cut_fraction": cross / max(len(e), 1),
+        "mean_subgraph_size": float(sizes.mean()) if len(sizes) else 0.0,
+        "max_subgraph_size": int(sizes.max()) if len(sizes) else 0,
+    }

@@ -1,0 +1,126 @@
+"""Comparison baseline for Fig. 6: iterated max-flow min-cut (Zeng et al. [36]).
+
+The paper describes the baseline as: iterate over pairs of edge servers,
+take the pair as (source, sink), run max-flow/min-cut on the vertices and
+edges spanning the two servers' current partitions, and re-partition by the
+resulting cut. Edge weights are random integers in [1, 100]; the number of
+iterations scales with the number of server pairs. Overall O(V²E).
+
+We implement Dinic's algorithm (adjacency-list residual graph) and the
+pairwise re-partition loop. The benchmark (``benchmarks/bench_hicut.py``)
+compares wall time and cut quality against HiCut on the paper's sparse /
+non-sparse random graphs.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+
+class Dinic:
+    def __init__(self, n: int):
+        self.n = n
+        self.head: list[list[int]] = [[] for _ in range(n)]
+        self.to: list[int] = []
+        self.cap: list[int] = []
+
+    def add_edge(self, u: int, v: int, c: int) -> None:
+        self.head[u].append(len(self.to)); self.to.append(v); self.cap.append(c)
+        self.head[v].append(len(self.to)); self.to.append(u); self.cap.append(c)
+
+    def _bfs(self, s: int, t: int) -> bool:
+        self.level = [-1] * self.n
+        self.level[s] = 0
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for eid in self.head[u]:
+                v = self.to[eid]
+                if self.cap[eid] > 0 and self.level[v] < 0:
+                    self.level[v] = self.level[u] + 1
+                    q.append(v)
+        return self.level[t] >= 0
+
+    def _dfs(self, u: int, t: int, f: int) -> int:
+        if u == t:
+            return f
+        while self.it[u] < len(self.head[u]):
+            eid = self.head[u][self.it[u]]
+            v = self.to[eid]
+            if self.cap[eid] > 0 and self.level[v] == self.level[u] + 1:
+                d = self._dfs(v, t, min(f, self.cap[eid]))
+                if d > 0:
+                    self.cap[eid] -= d
+                    self.cap[eid ^ 1] += d
+                    return d
+            self.it[u] += 1
+        return 0
+
+    def max_flow(self, s: int, t: int) -> int:
+        flow = 0
+        while self._bfs(s, t):
+            self.it = [0] * self.n
+            while True:
+                f = self._dfs(s, t, 1 << 60)
+                if f == 0:
+                    break
+                flow += f
+        return flow
+
+    def min_cut_side(self, s: int) -> np.ndarray:
+        """Vertices reachable from s in the residual graph (source side)."""
+        side = np.zeros(self.n, bool)
+        side[s] = True
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            for eid in self.head[u]:
+                v = self.to[eid]
+                if self.cap[eid] > 0 and not side[v]:
+                    side[v] = True
+                    q.append(v)
+        return side
+
+
+def pairwise_mincut_partition(n: int, edges: np.ndarray, weights: np.ndarray,
+                              num_servers: int, seed: int = 0) -> np.ndarray:
+    """The [36]-style baseline: pairwise max-flow min-cut re-partitioning."""
+    rng = np.random.default_rng(seed)
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    assign = rng.integers(0, num_servers, n)
+    import sys
+    old_limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(old_limit, n + 1024))
+    try:
+        for k in range(num_servers):
+            for l in range(k + 1, num_servers):
+                members = np.nonzero((assign == k) | (assign == l))[0]
+                if len(members) < 2:
+                    continue
+                local = -np.ones(n, np.int64)
+                local[members] = np.arange(len(members))
+                emask = (local[edges[:, 0]] >= 0) & (local[edges[:, 1]] >= 0)
+                sub_e = edges[emask]
+                sub_w = weights[emask]
+                if len(sub_e) == 0:
+                    continue
+                g = Dinic(len(members))
+                for (u, v), c in zip(sub_e, sub_w):
+                    g.add_edge(int(local[u]), int(local[v]), int(c))
+                # anchor terminals: highest-degree member of each side
+                deg = np.zeros(len(members), np.int64)
+                np.add.at(deg, local[sub_e[:, 0]], 1)
+                np.add.at(deg, local[sub_e[:, 1]], 1)
+                side_k = assign[members] == k
+                if not side_k.any() or side_k.all():
+                    continue
+                s = int(np.argmax(np.where(side_k, deg, -1)))
+                t = int(np.argmax(np.where(~side_k, deg, -1)))
+                g.max_flow(s, t)
+                src_side = g.min_cut_side(s)
+                assign[members[src_side]] = k
+                assign[members[~src_side]] = l
+    finally:
+        sys.setrecursionlimit(old_limit)
+    return assign

@@ -1,0 +1,46 @@
+"""Non-learning offloading baselines (paper §6.1): GM and RM."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.offload.env import OffloadEnv
+
+
+def run_greedy(env: OffloadEnv) -> dict:
+    """GM: offload each user to the nearest (non-full) edge server."""
+    env.reset()
+    total_r = 0.0
+    while env.t < env.num_steps:
+        i = env.current_user()
+        d = env.d_im[i].copy()
+        d[env.done_m] = np.inf
+        if not np.isfinite(d).any():
+            d = env.d_im[i]
+        k = int(np.argmin(d))
+        acts = np.zeros((env.m, 2), np.float32)
+        acts[:, 1] = 1.0
+        acts[k, 0] = 2.0
+        _, _, rew, _, _ = env.step(acts)
+        total_r += float(rew.sum())
+    final = env.final_cost()
+    return {"reward": total_r, "system_cost": float(final.c),
+            "t_all": float(final.t_all), "i_all": float(final.i_all),
+            "cross_bits": float(final.cross_bits.sum())}
+
+
+def run_random(env: OffloadEnv, seed: int = 0) -> dict:
+    """RM: offload each user to a uniformly random server."""
+    rng = np.random.default_rng(seed)
+    env.reset()
+    total_r = 0.0
+    while env.t < env.num_steps:
+        k = int(rng.integers(env.m))
+        acts = np.zeros((env.m, 2), np.float32)
+        acts[:, 1] = 1.0
+        acts[k, 0] = 2.0
+        _, _, rew, _, _ = env.step(acts)
+        total_r += float(rew.sum())
+    final = env.final_cost()
+    return {"reward": total_r, "system_cost": float(final.c),
+            "t_all": float(final.t_all), "i_all": float(final.i_all),
+            "cross_bits": float(final.cross_bits.sum())}

@@ -1,0 +1,130 @@
+"""DRLGO training (paper Algorithm 2) and the GraphEdge controller loop.
+
+Each episode: dynamically perturb the scenario (20% change rate by default,
+§6.4), rebuild the dynamic graph layout, run HiCut (Algorithm 1) to get
+G_sub, then roll the MAMDP: every step all agents act, one user is placed,
+transitions go to the replay buffer, and every agent takes a gradient step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costs
+from repro.core.dynamic_graph import GraphState, random_scenario, \
+    perturb_scenario
+from repro.core.hicut import hicut_ref
+from repro.core.offload.env import ACT_DIM, OBS_DIM, OffloadEnv
+from repro.core.offload.maddpg import (MADDPGConfig, ReplayBuffer,
+                                       init_maddpg, maddpg_update,
+                                       select_actions)
+
+
+def hicut_partition(state: GraphState) -> np.ndarray:
+    """Run HiCut (ref impl) on a GraphState → [N] subgraph ids."""
+    adj = np.asarray(state.adj)
+    mask = np.asarray(state.mask) > 0
+    edges = np.transpose(np.nonzero(np.triu(adj)))
+    return hicut_ref(state.capacity, edges, active=mask)
+
+
+@dataclass
+class DRLGOTrainerConfig:
+    capacity: int = 64            # graph-state capacity (max users)
+    n_users: int = 50
+    n_assoc: int = 150
+    n_servers: int = 4
+    episodes: int = 200
+    change_rate: float = 0.2      # §6.4 dynamic change rate
+    zeta_sp: float = 0.1          # ζ (Eq. 25) — balances R_sp vs ΔC in reward
+    use_hicut: bool = True        # False → the DRL-only ablation (Fig. 12)
+    cost_scale: float = 20.0      # reward normalizer
+    updates_per_step: int = 1
+    warmup_steps: int = 512
+    seed: int = 0
+    initial_scenario: GraphState | None = None   # e.g. dataset-derived
+
+
+@dataclass
+class DRLGOTrainer:
+    cfg: DRLGOTrainerConfig
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.key = jax.random.PRNGKey(self.cfg.seed)
+        self.mcfg = MADDPGConfig(n_agents=self.cfg.n_servers,
+                                 obs_dim=OBS_DIM, act_dim=ACT_DIM)
+        self.key, k = jax.random.split(self.key)
+        self.state = init_maddpg(self.mcfg, k)
+        self.buffer = ReplayBuffer(self.mcfg, seed=self.cfg.seed)
+        self.scenario = (self.cfg.initial_scenario
+                         if self.cfg.initial_scenario is not None else
+                         random_scenario(self.rng, self.cfg.capacity,
+                                         self.cfg.n_users,
+                                         self.cfg.n_assoc))
+        self.net = costs.default_network(self.rng, self.cfg.capacity,
+                                         self.cfg.n_servers)
+        self.history: list[dict] = []
+
+    def make_env(self, scenario: GraphState) -> OffloadEnv:
+        if self.cfg.use_hicut:
+            sub = hicut_partition(scenario)
+        else:  # DRL-only ablation: every vertex its own "subgraph"
+            sub = np.arange(scenario.capacity)
+        return OffloadEnv(self.net, scenario, sub,
+                          zeta_sp=self.cfg.zeta_sp,
+                          use_subgraph_reward=self.cfg.use_hicut,
+                          cost_scale=self.cfg.cost_scale)
+
+    def run_episode(self, env: OffloadEnv, explore: bool = True,
+                    learn: bool = True) -> dict:
+        obs, state = env.reset()
+        ep_reward = 0.0
+        losses = {}
+        while env.t < env.num_steps:
+            self.key, k = jax.random.split(self.key)
+            acts = np.asarray(select_actions(self.mcfg, self.state,
+                                             jnp.asarray(obs), k,
+                                             explore=explore))
+            obs2, state2, rew, done, _ = env.step(acts)
+            ep_reward += float(rew.sum())          # Eq. (23)
+            if learn:
+                self.buffer.add(obs, state, acts, rew, obs2, state2, done)
+                if len(self.buffer) >= max(self.mcfg.batch_size,
+                                           self.cfg.warmup_steps):
+                    for _ in range(self.cfg.updates_per_step):
+                        batch = tuple(jnp.asarray(x)
+                                      for x in self.buffer.sample())
+                        self.state, losses = maddpg_update(
+                            self.mcfg, self.state, batch)
+            obs, state = obs2, state2
+        final = env.final_cost()
+        return {"reward": ep_reward, "system_cost": float(final.c),
+                "t_all": float(final.t_all), "i_all": float(final.i_all),
+                "cross_bits": float(final.cross_bits.sum()),
+                **{k: float(v) for k, v in losses.items()}}
+
+    def train(self, episodes: int | None = None, log_every: int = 0,
+              ) -> list[dict]:
+        episodes = episodes or self.cfg.episodes
+        for e in range(episodes):
+            # Algorithm 2 line 8: dynamically change env, rebuild G via
+            # the dynamic graph model, run Algorithm 1 for G_sub
+            self.scenario = perturb_scenario(self.rng, self.scenario,
+                                             self.cfg.change_rate)
+            env = self.make_env(self.scenario)
+            stats = self.run_episode(env)
+            stats["episode"] = e
+            self.history.append(stats)
+            if log_every and (e + 1) % log_every == 0:
+                print(f"ep {e+1:4d} reward {stats['reward']:10.2f} "
+                      f"cost {stats['system_cost']:10.2f}")
+        return self.history
+
+    def evaluate(self, scenario: GraphState, repeats: int = 1) -> dict:
+        outs = [self.run_episode(self.make_env(scenario), explore=False,
+                                 learn=False) for _ in range(repeats)]
+        return {k: float(np.mean([o[k] for o in outs])) for k in outs[0]}

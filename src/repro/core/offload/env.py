@@ -1,0 +1,172 @@
+"""MAMDP environment for graph offloading (paper §5.1–5.2).
+
+Users are iterated one by one; at each step every agent (one per edge
+server) emits a two-dimensional action in [0,1]² (Eq. 22) whose first
+component is read as "offload the current user to my server"; the user goes
+to the eligible (non-full) server whose agent scored highest, which realizes
+constraint C1 (exactly one server per user) by construction.
+
+Rewards follow Eqs. (23)–(25): the serving agent receives
+``−(C_m + R_sp)`` where ``C_m`` is the *marginal* system cost
+(Eqs. 4,5,7,8,9 deltas + the user's share of the GNN energy, Eqs. 10–11)
+of hosting the user, and ``R_sp = ζ·N_s/N_c`` penalizes spreading one
+HiCut subgraph over many servers. The global reward is the sum.
+
+Observations are a fixed-size featurization of Eq. (20): the current user's
+(position, |N_i|, X_i, uplink bandwidth/distance to the agent's server), the
+server's remaining service capacity and f_k, and subgraph-placement context.
+The paper's raw O_m is variable-length (all users in scope); a fixed
+featurization is the standard practical choice and is noted in DESIGN.md.
+
+All incremental cost arithmetic reuses the constants and formulas of
+``repro.core.costs`` (checked against the batch ``system_cost`` in tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import costs
+from repro.core.costs import KB, EdgeNetwork, GNNCostParams
+from repro.core.dynamic_graph import GraphState
+
+OBS_DIM = 12
+ACT_DIM = 2   # Eq. (22)
+
+
+@dataclass
+class OffloadEnv:
+    net: EdgeNetwork
+    state: GraphState
+    subgraph: np.ndarray            # [N] int  — HiCut subgraph id (−1 masked)
+    gnn: GNNCostParams = field(default_factory=GNNCostParams)
+    zeta_sp: float = 1.0            # ζ in Eq. (25)
+    use_subgraph_reward: bool = True  # False → the DRL-only ablation
+    cost_scale: float = 1.0         # reward normalizer (does not change argmin)
+
+    def __post_init__(self):
+        self.m = int(self.net.server_pos.shape[0])
+        self.n = int(self.state.capacity)
+        self.mask = np.asarray(self.state.mask) > 0
+        self.pos = np.asarray(self.state.pos)
+        self.adj = np.asarray(self.state.adj)
+        self.kb = np.asarray(self.state.task_kb)
+        self.deg = self.adj.sum(1) * self.mask
+        self.rate_up = np.asarray(costs.uplink_rate(self.net, self.state))
+        self.rate_sv = np.asarray(costs.server_rate(self.net))
+        self.f_k = np.asarray(self.net.f_k)
+        self.caps = np.asarray(self.net.capacity)
+        self.zeta_im = float(self.net.zeta_im)
+        self.zeta_kl = float(self.net.zeta_kl)
+        self.d_im = np.linalg.norm(
+            self.pos[:, None, :] - np.asarray(self.net.server_pos)[None], axis=-1)
+        # visit users subgraph-by-subgraph (the controller knows G_sub)
+        order = np.nonzero(self.mask)[0]
+        self.order = order[np.argsort(self.subgraph[order], kind="stable")]
+
+    # -- episode control ----------------------------------------------------
+    def reset(self) -> tuple[np.ndarray, np.ndarray]:
+        self.t = 0
+        self.assign = -np.ones(self.n, np.int64)
+        self.load = np.zeros(self.m)
+        self.done_m = np.zeros(self.m, bool)
+        return self._obs(), self._global_state()
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.order)
+
+    def current_user(self) -> int:
+        return int(self.order[self.t])
+
+    def _user_gnn_energy(self, i: int) -> float:
+        """User i's share of Eqs. (10)–(11) summed over layers."""
+        sizes = [s * KB for s in self.gnn.layer_sizes_kb]
+        tot = 0.0
+        for k in range(1, len(sizes)):
+            tot += self.gnn.mu * self.deg[i] * sizes[k - 1]
+            tot += self.gnn.theta * sizes[k - 1] * sizes[k] / \
+                self.gnn.update_norm_bits + self.gnn.phi * sizes[k]
+        return tot
+
+    def marginal_cost(self, i: int, k: int) -> float:
+        """ΔC of hosting user i on server k given the partial assignment."""
+        bits = self.kb[i] * KB
+        t_up = bits / max(self.rate_up[i, k], 1.0)
+        i_up = bits * self.zeta_im
+        t_com = bits / self.f_k[k]
+        t_tran = i_com = 0.0
+        for j in np.nonzero(self.adj[i])[0]:
+            l = self.assign[j]
+            if l >= 0 and l != k:
+                jbits = self.kb[j] * KB
+                t_tran += (bits + jbits) / max(self.rate_sv[k, l], 1.0)
+                i_com += self.zeta_kl * (bits + jbits)
+        return t_up + i_up + t_com + t_tran + i_com + self._user_gnn_energy(i)
+
+    def _r_sp(self, i: int, k: int) -> float:
+        """Eq. (25) for user i's subgraph after placing it on server k."""
+        c = self.subgraph[i]
+        members = (self.subgraph == c) & (self.assign >= 0)
+        servers = set(self.assign[members].tolist()) | {k}
+        n_c = members.sum() + 1
+        return self.zeta_sp * len(servers) / n_c
+
+    # -- observations --------------------------------------------------------
+    def _obs(self) -> np.ndarray:
+        """[M, OBS_DIM] local observations O_m (Eq. 20, fixed featurization)."""
+        i = self.current_user() if self.t < self.num_steps else self.order[-1]
+        obs = np.zeros((self.m, OBS_DIM), np.float32)
+        c = self.subgraph[i]
+        members = (self.subgraph == c) & (self.assign >= 0)
+        n_c = max(members.sum(), 1)
+        for m in range(self.m):
+            frac_here = (self.assign[members] == m).sum() / n_c
+            obs[m] = [
+                self.pos[i, 0] / 2000.0, self.pos[i, 1] / 2000.0,
+                self.deg[i] / 16.0,
+                self.kb[i] / 1500.0,
+                self.d_im[i, m] / 2000.0,
+                self.rate_up[i, m] / 1e9,
+                (self.caps[m] - self.load[m]) / max(self.caps[m], 1.0),
+                self.f_k[m] / 10e9,
+                frac_here,
+                len(set(self.assign[members].tolist())) / self.m,
+                self.load[m] / max(self.caps[m], 1.0),
+                self.t / max(self.num_steps, 1),
+            ]
+        return obs
+
+    def _global_state(self) -> np.ndarray:
+        """S(t) = concat of local observations (Eq. 19)."""
+        return self._obs().reshape(-1)
+
+    # -- step ------------------------------------------------------------
+    def step(self, actions: np.ndarray):
+        """actions: [M, 2] in [0,1] (Eq. 22). Returns MADDPG transition."""
+        i = self.current_user()
+        score = actions[:, 0] - actions[:, 1]
+        eligible = ~self.done_m
+        if not eligible.any():          # all servers full: least-loaded hosts
+            eligible = self.load == self.load.min()
+        k = int(np.argmax(np.where(eligible, score, -np.inf)))
+        dc = self.marginal_cost(i, k)
+        r_sp = self._r_sp(i, k) if self.use_subgraph_reward else 0.0
+        rewards = np.zeros(self.m, np.float32)
+        rewards[k] = -(dc / self.cost_scale + r_sp)          # Eq. (24)
+        self.assign[i] = k
+        self.load[k] += 1
+        self.done_m = self.load >= self.caps
+        self.t += 1
+        done = self.t >= self.num_steps
+        if done:
+            self.done_m[:] = True
+        return self._obs(), self._global_state(), rewards, done, k
+
+    # -- final accounting ----------------------------------------------------
+    def final_cost(self) -> costs.SystemCost:
+        """Batch-check the episode with the exact Eqs. (12)–(14) model."""
+        import jax.numpy as jnp
+        w = costs.assignment_onehot(jnp.asarray(self.assign), self.m)
+        return costs.system_cost(self.net, self.state, w, self.gnn)

@@ -1,0 +1,180 @@
+"""MADDPG (Lowe et al. [46]) in pure JAX — the learner behind DRLGO (§5.3).
+
+One actor per edge server (local observation → 2-dim action in [0,1]²,
+Eq. 22) and one centralized critic per agent (global state + all agents'
+actions → Q). Target networks with soft updates (Eqs. 31–32), replay buffer,
+deterministic policy gradient (Eq. 28), TD target (Eq. 30).
+
+Networks follow the paper's training settings: 3 layers × 64 neurons,
+actor-critic lr 3e-4, γ = 0.99, τ = 0.01, buffer 1e5, batch 256,
+exploration noise 0.1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nnlib.core import mlp_init, mlp_apply, tree_polyak
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class MADDPGConfig:
+    n_agents: int
+    obs_dim: int
+    act_dim: int = 2
+    hidden: int = 64          # paper: 3 layers × 64 neurons
+    layers: int = 3
+    lr: float = 3e-4          # paper Table 2
+    gamma: float = 0.99
+    tau: float = 0.01
+    buffer_size: int = 100_000
+    batch_size: int = 256
+    explore_noise: float = 0.1
+
+    @property
+    def state_dim(self) -> int:
+        return self.n_agents * self.obs_dim
+
+
+class MADDPGState(NamedTuple):
+    actor: list                # per-agent actor params
+    critic: list               # per-agent critic params
+    actor_t: list              # target actors
+    critic_t: list             # target critics
+    opt_actor: list
+    opt_critic: list
+
+
+def _net_sizes(cfg: MADDPGConfig, in_dim: int, out_dim: int) -> list[int]:
+    return [in_dim] + [cfg.hidden] * (cfg.layers - 1) + [out_dim]
+
+
+def init_maddpg(cfg: MADDPGConfig, key) -> MADDPGState:
+    keys = jax.random.split(key, 2 * cfg.n_agents)
+    actors, critics = [], []
+    for m in range(cfg.n_agents):
+        actors.append(mlp_init(keys[2 * m],
+                               _net_sizes(cfg, cfg.obs_dim, cfg.act_dim)))
+        critics.append(mlp_init(
+            keys[2 * m + 1],
+            _net_sizes(cfg, cfg.state_dim + cfg.n_agents * cfg.act_dim, 1)))
+    copy = lambda t: jax.tree_util.tree_map(jnp.copy, t)
+    return MADDPGState(
+        actor=actors, critic=critics,
+        actor_t=copy(actors), critic_t=copy(critics),
+        opt_actor=[adamw_init(a) for a in actors],
+        opt_critic=[adamw_init(c) for c in critics])
+
+
+def actor_forward(params, obs: jnp.ndarray) -> jnp.ndarray:
+    """π_m(O_m) ∈ [0,1]^act_dim (Eq. 22)."""
+    return mlp_apply(params, obs, final_activation=jax.nn.sigmoid)
+
+
+def critic_forward(params, state: jnp.ndarray, acts: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Q_m(S, A) — centralized critic."""
+    x = jnp.concatenate([state, acts.reshape(*acts.shape[:-2], -1)], -1)
+    return mlp_apply(params, x)[..., 0]
+
+
+class ReplayBuffer:
+    """(S, A, R, S', done) experience replay (paper §5.3)."""
+
+    def __init__(self, cfg: MADDPGConfig, seed: int = 0):
+        self.cfg = cfg
+        n, o, a = cfg.n_agents, cfg.obs_dim, cfg.act_dim
+        size = cfg.buffer_size
+        self.obs = np.zeros((size, n, o), np.float32)
+        self.state = np.zeros((size, n * o), np.float32)
+        self.acts = np.zeros((size, n, a), np.float32)
+        self.rew = np.zeros((size, n), np.float32)
+        self.obs2 = np.zeros((size, n, o), np.float32)
+        self.state2 = np.zeros((size, n * o), np.float32)
+        self.done = np.zeros((size,), np.float32)
+        self.ptr = 0
+        self.full = False
+        self.rng = np.random.default_rng(seed)
+
+    def add(self, obs, state, acts, rew, obs2, state2, done):
+        i = self.ptr
+        self.obs[i], self.state[i], self.acts[i] = obs, state, acts
+        self.rew[i], self.obs2[i], self.state2[i] = rew, obs2, state2
+        self.done[i] = float(done)
+        self.ptr = (self.ptr + 1) % self.cfg.buffer_size
+        self.full = self.full or self.ptr == 0
+
+    def __len__(self):
+        return self.cfg.buffer_size if self.full else self.ptr
+
+    def sample(self):
+        idx = self.rng.integers(0, len(self), self.cfg.batch_size)
+        return (self.obs[idx], self.state[idx], self.acts[idx],
+                self.rew[idx], self.obs2[idx], self.state2[idx],
+                self.done[idx])
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def maddpg_update(cfg: MADDPGConfig, st: MADDPGState, batch) -> tuple:
+    """One gradient step for every agent (Algorithm 2, lines 15–20)."""
+    obs, state, acts, rew, obs2, state2, done = batch
+    opt = AdamWConfig(lr=cfg.lr)
+
+    # target actions A' = {π'_m(O'_m)}
+    a2 = jnp.stack([actor_forward(st.actor_t[m], obs2[:, m])
+                    for m in range(cfg.n_agents)], axis=1)
+
+    new_actor, new_critic = list(st.actor), list(st.critic)
+    new_oa, new_oc = list(st.opt_actor), list(st.opt_critic)
+    losses = {}
+    for m in range(cfg.n_agents):
+        # critic: minimize (Q_m(S,A) − Y)², Y per Eq. (30)
+        y = rew[:, m] + (1.0 - done) * cfg.gamma * \
+            critic_forward(st.critic_t[m], state2, a2)
+        y = jax.lax.stop_gradient(y)
+
+        def critic_loss(p):
+            q = critic_forward(p, state, acts)
+            return jnp.mean((q - y) ** 2)
+
+        cl, gc = jax.value_and_grad(critic_loss)(st.critic[m])
+        new_critic[m], new_oc[m] = adamw_update(opt, gc, st.opt_critic[m],
+                                                st.critic[m])
+
+        # actor: deterministic policy gradient (Eq. 28)
+        def actor_loss(p):
+            am = actor_forward(p, obs[:, m])
+            afull = acts.at[:, m].set(am)
+            return -jnp.mean(critic_forward(new_critic[m], state, afull))
+
+        al, ga = jax.value_and_grad(actor_loss)(st.actor[m])
+        new_actor[m], new_oa[m] = adamw_update(opt, ga, st.opt_actor[m],
+                                               st.actor[m])
+        losses[f"critic_{m}"] = cl
+        losses[f"actor_{m}"] = al
+
+    # soft target updates (Eqs. 31–32)
+    actor_t = [tree_polyak(a, at, cfg.tau)
+               for a, at in zip(new_actor, st.actor_t)]
+    critic_t = [tree_polyak(c, ct, cfg.tau)
+                for c, ct in zip(new_critic, st.critic_t)]
+    return MADDPGState(new_actor, new_critic, actor_t, critic_t,
+                       new_oa, new_oc), losses
+
+
+@partial(jax.jit, static_argnames=("cfg", "explore"))
+def select_actions(cfg: MADDPGConfig, st: MADDPGState, obs: jnp.ndarray,
+                   key, explore: bool = True) -> jnp.ndarray:
+    """A_m = π_m(O_m) (+ exploration noise), clipped to [0,1] (Eq. 22)."""
+    acts = jnp.stack([actor_forward(st.actor[m], obs[m])
+                      for m in range(cfg.n_agents)])
+    if explore:
+        noise = cfg.explore_noise * jax.random.normal(key, acts.shape)
+        acts = acts + noise
+    return jnp.clip(acts, 0.0, 1.0)

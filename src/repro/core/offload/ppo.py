@@ -1,0 +1,141 @@
+"""PTOM baseline (§6.1): PPO task offloading with the global state.
+
+Single agent, categorical policy over the M servers for the current user,
+clipped-surrogate PPO with GAE. Same network budget as DRLGO (3×64) and no
+HiCut / subgraph constraint, exactly as the paper describes the baseline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nnlib.core import mlp_init, mlp_apply
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.core.offload.env import OffloadEnv
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    state_dim: int
+    n_actions: int
+    hidden: int = 64
+    layers: int = 3
+    lr: float = 3e-4
+    gamma: float = 0.99
+    lam: float = 0.95
+    clip: float = 0.2
+    epochs: int = 4
+    minibatch: int = 256
+    entropy_coef: float = 0.01
+
+
+class PPOState(NamedTuple):
+    policy: list
+    value: list
+    opt_p: object
+    opt_v: object
+
+
+def init_ppo(cfg: PPOConfig, key) -> PPOState:
+    kp, kv = jax.random.split(key)
+    sizes_p = [cfg.state_dim] + [cfg.hidden] * (cfg.layers - 1) + [cfg.n_actions]
+    sizes_v = [cfg.state_dim] + [cfg.hidden] * (cfg.layers - 1) + [1]
+    p, v = mlp_init(kp, sizes_p), mlp_init(kv, sizes_v)
+    return PPOState(p, v, adamw_init(p), adamw_init(v))
+
+
+def policy_logits(params, s):
+    return mlp_apply(params, s)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def ppo_update(cfg: PPOConfig, st: PPOState, batch):
+    s, a, logp_old, adv, ret = batch
+    opt = AdamWConfig(lr=cfg.lr)
+
+    def ploss(p):
+        logits = policy_logits(p, s)
+        logp = jax.nn.log_softmax(logits)[jnp.arange(a.shape[0]), a]
+        ratio = jnp.exp(logp - logp_old)
+        clipped = jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip)
+        ent = -jnp.mean(jnp.sum(jax.nn.softmax(logits) *
+                                jax.nn.log_softmax(logits), -1))
+        return -jnp.mean(jnp.minimum(ratio * adv, clipped * adv)) \
+            - cfg.entropy_coef * ent
+
+    def vloss(p):
+        v = mlp_apply(p, s)[:, 0]
+        return jnp.mean((v - ret) ** 2)
+
+    pl, gp = jax.value_and_grad(ploss)(st.policy)
+    vl, gv = jax.value_and_grad(vloss)(st.value)
+    newp, op = adamw_update(opt, gp, st.opt_p, st.policy)
+    newv, ov = adamw_update(opt, gv, st.opt_v, st.value)
+    return PPOState(newp, newv, op, ov), {"policy_loss": pl, "value_loss": vl}
+
+
+@dataclass
+class PTOMAgent:
+    """Rollout + update driver for the PPO baseline."""
+    cfg: PPOConfig
+    seed: int = 0
+
+    def __post_init__(self):
+        self.key = jax.random.PRNGKey(self.seed)
+        self.key, k = jax.random.split(self.key)
+        self.state = init_ppo(self.cfg, k)
+
+    def run_episode(self, env: OffloadEnv, learn: bool = True,
+                    explore: bool = True) -> dict:
+        obs, s = env.reset()
+        traj = {k: [] for k in ("s", "a", "logp", "r", "v")}
+        total_r = 0.0
+        while env.t < env.num_steps:
+            logits = policy_logits(self.state.policy, jnp.asarray(s))
+            v = mlp_apply(self.state.value, jnp.asarray(s))[0]
+            self.key, k = jax.random.split(self.key)
+            if explore:
+                a = int(jax.random.categorical(k, logits))
+            else:
+                a = int(jnp.argmax(logits))
+            logp = jax.nn.log_softmax(logits)[a]
+            # PTOM picks the server directly: one-hot "yes" to server a
+            acts = np.zeros((env.m, 2), np.float32)
+            acts[:, 1] = 1.0
+            acts[a, 0] = 2.0
+            obs, s2, rew, done, _ = env.step(acts)
+            r = float(rew.sum())
+            total_r += r
+            for key_, val in zip(("s", "a", "logp", "r", "v"),
+                                 (s, a, float(logp), r, float(v))):
+                traj[key_].append(val)
+            s = s2
+        if learn:
+            self._update(traj)
+        final = env.final_cost()
+        return {"reward": total_r, "system_cost": float(final.c),
+                "t_all": float(final.t_all), "i_all": float(final.i_all),
+                "cross_bits": float(final.cross_bits.sum())}
+
+    def _update(self, traj):
+        r = np.array(traj["r"], np.float32)
+        v = np.array(traj["v"] + [0.0], np.float32)
+        adv = np.zeros_like(r)
+        gae = 0.0
+        for t in reversed(range(len(r))):
+            delta = r[t] + self.cfg.gamma * v[t + 1] - v[t]
+            gae = delta + self.cfg.gamma * self.cfg.lam * gae
+            adv[t] = gae
+        ret = adv + v[:-1]
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        s = jnp.asarray(np.array(traj["s"], np.float32))
+        a = jnp.asarray(np.array(traj["a"], np.int32))
+        lp = jnp.asarray(np.array(traj["logp"], np.float32))
+        batch = (s, a, lp, jnp.asarray(adv), jnp.asarray(ret))
+        for _ in range(self.cfg.epochs):
+            self.state, _ = ppo_update(self.cfg, self.state, batch)

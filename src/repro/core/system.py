@@ -1,0 +1,40 @@
+"""GraphEdge — the top-level architecture (paper Figs. 1–2).
+
+Processing flow per time step:
+  1. perceive the user topology → dynamic graph layout G(t) (§3.2),
+  2. optimize the layout with HiCut → G_sub (§4, subproblem P1),
+  3. run the (trained) DRLGO policy → graph offloading decision w (§5, P2),
+  4. broadcast w; the offloaded tasks feed distributed GNN inference
+     (``repro.gnn.distributed``), and the exact system cost (Eqs. 12–14)
+     is accounted.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import costs
+from repro.core.dynamic_graph import GraphState
+from repro.core.offload.drlgo import DRLGOTrainer, hicut_partition
+from repro.core.offload.env import OffloadEnv
+
+
+@dataclass
+class GraphEdge:
+    """EC-controller facade: perceive → HiCut → offload → account."""
+    trainer: DRLGOTrainer
+
+    def offload(self, scenario: GraphState) -> dict:
+        """One control step: returns assignment + full cost accounting."""
+        sub = hicut_partition(scenario)
+        env = OffloadEnv(self.trainer.net, scenario, sub,
+                         zeta_sp=self.trainer.cfg.zeta_sp,
+                         cost_scale=self.trainer.cfg.cost_scale)
+        stats = self.trainer.run_episode(env, explore=False, learn=False)
+        return {
+            "assignment": env.assign.copy(),
+            "subgraphs": sub,
+            "num_subgraphs": int(len(np.unique(sub[sub >= 0]))),
+            **stats,
+        }

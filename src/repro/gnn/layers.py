@@ -1,0 +1,146 @@
+"""GNN models used by the paper's experiments: GCN, GAT, GraphSAGE, SGC.
+
+Dense-adjacency JAX implementations (the EC scenarios have ≤ a few thousand
+vertices; dense `A @ H` is the MXU-native formulation — see DESIGN.md
+hardware-adaptation notes). All models share the signature
+
+    params = <model>_init(key, dims...)
+    logits = <model>_apply(params, x, adj, mask, *, impl="xla")
+
+where ``adj`` is the raw 0/1 symmetric adjacency (no self-loops) and ``mask``
+marks active vertices. ``impl`` selects the aggregation backend: plain XLA
+einsum or the Pallas blocked-SpMM kernel (``repro.kernels.gnn_aggregate``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nnlib.core import glorot_init
+from repro.kernels.gnn_aggregate.ops import normalized_aggregate
+
+
+def _masked_adj(adj: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    return adj * mask[:, None] * mask[None, :]
+
+
+def gcn_norm(adj: jnp.ndarray, mask: jnp.ndarray
+             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (Â, D̃^{-1/2}) for Eq. (1): Â = A + I (active vertices only)."""
+    a = _masked_adj(adj, mask) + jnp.diag(mask)
+    deg = jnp.sum(a, axis=1)
+    dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-9)), 0.0)
+    return a, dinv
+
+
+def propagate(adj_hat: jnp.ndarray, dinv: jnp.ndarray, h: jnp.ndarray,
+              impl: str = "xla") -> jnp.ndarray:
+    """D̃^{-1/2} Â D̃^{-1/2} H — the aggregation hot spot (Eq. 1)."""
+    return normalized_aggregate(adj_hat, h, dinv, dinv, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# GCN (Kipf & Welling; paper Eqs. 1–2)
+# ---------------------------------------------------------------------------
+
+def gcn_init(key, dims: list[int]):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [{"w": glorot_init(k, (i, o))}
+            for k, i, o in zip(keys, dims[:-1], dims[1:])]
+
+
+def gcn_apply(params, x, adj, mask, impl: str = "xla"):
+    a_hat, dinv = gcn_norm(adj, mask)
+    h = x
+    for i, layer in enumerate(params):
+        h = propagate(a_hat, dinv, h @ layer["w"], impl=impl)
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h * mask[:, None]
+
+
+# ---------------------------------------------------------------------------
+# SGC (Wu et al. [51]): Â^K X W, no intermediate nonlinearity
+# ---------------------------------------------------------------------------
+
+SGC_HOPS = 2
+
+
+def sgc_init(key, in_dim: int, out_dim: int):
+    return {"w": glorot_init(key, (in_dim, out_dim))}
+
+
+def sgc_apply(params, x, adj, mask, impl: str = "xla"):
+    a_hat, dinv = gcn_norm(adj, mask)
+    h = x
+    for _ in range(SGC_HOPS):
+        h = propagate(a_hat, dinv, h, impl=impl)
+    return (h @ params["w"]) * mask[:, None]
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE (Hamilton et al. [30]) — mean aggregator
+# ---------------------------------------------------------------------------
+
+def sage_init(key, dims: list[int]):
+    keys = jax.random.split(key, 2 * (len(dims) - 1))
+    return [{"w_self": glorot_init(keys[2 * i], (dims[i], dims[i + 1])),
+             "w_nbr": glorot_init(keys[2 * i + 1], (dims[i], dims[i + 1]))}
+            for i in range(len(dims) - 1)]
+
+
+def sage_apply(params, x, adj, mask, impl: str = "xla"):
+    a = _masked_adj(adj, mask)
+    deg = jnp.maximum(jnp.sum(a, axis=1), 1.0)
+    h = x
+    for i, layer in enumerate(params):
+        mean_nbr = normalized_aggregate(a, h, 1.0 / deg,
+                                        jnp.ones_like(deg), impl=impl)
+        h = h @ layer["w_self"] + mean_nbr @ layer["w_nbr"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+            h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True),
+                                1e-6)
+    return h * mask[:, None]
+
+
+# ---------------------------------------------------------------------------
+# GAT (Velickovic et al. [50]) — single-head dense attention
+# ---------------------------------------------------------------------------
+
+def gat_init(key, dims: list[int]):
+    keys = jax.random.split(key, 3 * (len(dims) - 1))
+    out = []
+    for i in range(len(dims) - 1):
+        out.append({
+            "w": glorot_init(keys[3 * i], (dims[i], dims[i + 1])),
+            "a_src": glorot_init(keys[3 * i + 1], (dims[i + 1], 1)),
+            "a_dst": glorot_init(keys[3 * i + 2], (dims[i + 1], 1)),
+        })
+    return out
+
+
+def gat_apply(params, x, adj, mask, impl: str = "xla"):
+    a = _masked_adj(adj, mask) + jnp.diag(mask)   # self-attention edge
+    h = x
+    for i, layer in enumerate(params):
+        z = h @ layer["w"]
+        e = (z @ layer["a_src"]) + (z @ layer["a_dst"]).T   # e_ij broadcast
+        e = jax.nn.leaky_relu(e, 0.2)
+        e = jnp.where(a > 0, e, -1e9)
+        att = jax.nn.softmax(e, axis=1) * (a > 0)
+        h = att @ z
+        if i < len(params) - 1:
+            h = jax.nn.elu(h)
+    return h * mask[:, None]
+
+
+MODELS = {
+    "gcn": (lambda key, din, dh, dout: gcn_init(key, [din, dh, dout]),
+            gcn_apply),
+    "sgc": (lambda key, din, dh, dout: sgc_init(key, din, dout), sgc_apply),
+    "graphsage": (lambda key, din, dh, dout: sage_init(key, [din, dh, dout]),
+                  sage_apply),
+    "gat": (lambda key, din, dh, dout: gat_init(key, [din, dh, dout]),
+            gat_apply),
+}

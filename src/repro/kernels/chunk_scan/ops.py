@@ -1,0 +1,16 @@
+"""Public op: ssd_chunk_scan — XLA (jnp chunked) / Pallas / interpret."""
+from __future__ import annotations
+
+from repro.kernels.chunk_scan.chunk_scan import ssd_chunk_scan_pallas
+from repro.kernels.chunk_scan.ref import ssd_scan_ref
+
+
+def ssd_chunk_scan(x, bmat, cmat, loga, *, impl: str = "xla",
+                   chunk: int = 128):
+    """x [B,S,H,P] (Δ-scaled), b/c [B,S,N], loga [B,S,H] ≤ 0 → [B,S,H,P]."""
+    if impl == "xla":
+        return ssd_scan_ref(x, bmat, cmat, loga)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+    return ssd_chunk_scan_pallas(x, bmat, cmat, loga, chunk=chunk,
+                                 interpret=(impl == "interpret"))

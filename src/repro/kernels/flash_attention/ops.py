@@ -1,0 +1,28 @@
+"""Public op: flash_attention — XLA / Pallas / interpret dispatch."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import \
+    flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, impl: str = "xla",
+                    block: int = 128):
+    """q [B,H,S,dh], k/v [B,KV,S,dh] → [B,H,S,dh]."""
+    if impl == "xla":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+    s = q.shape[2]
+    bq = bk = min(block, s)
+    while s % bq:
+        bq //= 2
+    while s % bk:
+        bk //= 2
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  softcap=softcap, bq=bq, bk=bk,
+                                  interpret=(impl == "interpret"))

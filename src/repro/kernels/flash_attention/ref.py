@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window / softcap)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: int | None = None,
+                  softcap: float | None = None) -> jnp.ndarray:
+    """q [B,H,S,dh], k/v [B,KV,S,dh] (GQA) → [B,H,S,dh]."""
+    b, h, s, dh = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, s, dh).astype(jnp.float32)
+    sc = jnp.einsum("bkgqd,bksd->bkgqs", qg,
+                    k.astype(jnp.float32)) * dh ** -0.5
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = jnp.ones((s, s), bool)
+    if causal:
+        m &= i >= j
+    if window is not None:
+        m &= i - j < window
+    sc = jnp.where(m[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, h, s, dh).astype(q.dtype)

@@ -1,0 +1,41 @@
+"""Public op: normalized_aggregate — dispatches XLA / Pallas, handles padding.
+
+``impl``:
+  * "xla"      — plain jnp (runs everywhere; what the dry-run lowers)
+  * "pallas"   — the TPU kernel (real hardware)
+  * "interpret"— the Pallas kernel in interpret mode (CPU validation)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gnn_aggregate.gnn_aggregate import gnn_aggregate_pallas
+from repro.kernels.gnn_aggregate.ref import normalized_aggregate_ref
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axes: tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, 0)] * x.ndim
+    for ax in axes:
+        rem = (-x.shape[ax]) % mult
+        pads[ax] = (0, rem)
+    return jnp.pad(x, pads) if any(p != (0, 0) for p in pads) else x
+
+
+def normalized_aggregate(adj: jnp.ndarray, x: jnp.ndarray,
+                         row_scale, col_scale, impl: str = "xla",
+                         block: int = 128) -> jnp.ndarray:
+    if impl == "xla":
+        return normalized_aggregate_ref(adj, x, row_scale, col_scale)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+    n, f = adj.shape[0], x.shape[1]
+    rs = jnp.broadcast_to(jnp.asarray(row_scale, jnp.float32), (n,))
+    cs = jnp.broadcast_to(jnp.asarray(col_scale, jnp.float32), (n,))
+    adj_p = _pad_to(adj, block, (0, 1))
+    x_p = _pad_to(x, block, (0, 1))
+    rs_p = _pad_to(rs, block, (0,))
+    cs_p = _pad_to(cs, block, (0,))
+    y = gnn_aggregate_pallas(adj_p, x_p, rs_p, cs_p,
+                             bm=block, bk=block, bf=block,
+                             interpret=(impl == "interpret"))
+    return y[:n, :f]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the GNN aggregation kernel.
+
+Computes Y = (diag(rs) · A · diag(cs)) @ X — the normalized neighborhood
+aggregation D̃^{-1/2} Â D̃^{-1/2} H of GCN Eq. (1) (rs = cs = D̃^{-1/2}), the
+mean aggregator of GraphSAGE (rs = 1/deg, cs = 1), etc.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def normalized_aggregate_ref(adj: jnp.ndarray, x: jnp.ndarray,
+                             row_scale: jnp.ndarray,
+                             col_scale: jnp.ndarray) -> jnp.ndarray:
+    rs = jnp.broadcast_to(jnp.asarray(row_scale), (adj.shape[0],))
+    cs = jnp.broadcast_to(jnp.asarray(col_scale), (adj.shape[1],))
+    a = adj * rs[:, None] * cs[None, :]
+    return (a @ x.astype(jnp.float32)).astype(x.dtype)

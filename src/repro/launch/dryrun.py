@@ -1,0 +1,305 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+The ``os.environ`` line below MUST run before any other import — jax locks
+the device count on first init, and only the dry-run wants 512 placeholder
+host devices (smoke tests and benches see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+        --shape train_4k [--multipod] [--json out.json]
+
+Prints ``compiled.memory_analysis()`` (proves the per-device footprint
+fits 16 GB HBM) and ``cost_analysis()`` FLOPs/bytes, plus the §Roofline
+terms derived from the compiled HLO.
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.launch import roofline as RL
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (INPUT_SHAPES, applicable, decode_specs,
+                                 input_specs, params_specs)
+from repro.launch.shardings import (activation_shard_ctx, batch_shardings,
+                                    cache_shardings, opt_shardings,
+                                    param_shardings)
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, AdamState
+
+HBM_PER_CHIP = 16e9   # v5e
+
+# §Perf toggle: bf16 backward/gradient reductions (True = optimized
+# default; False = f32-backward baseline for the §Perf log)
+BF16_GRADS = True
+
+# §Perf toggle: int8-quantized KV cache for decode shapes (§Perf-3)
+KV_INT8 = False
+
+# grad-accumulation microbatch count for the train shape (memory-bound
+# archs need >1 to fit activation transients in 16 GB/chip)
+TRAIN_MICROBATCHES = {
+    "mixtral-8x7b": 4,            # µb=2 would cut collectives 13% but OOMs
+    "deepseek-v2-lite-16b": 2,    # §Perf: 4→2 confirmed (−8% collective)
+    "internvl2-26b": 2,           # §Perf: 4→2 confirmed (−46% collective)
+    "gemma2-9b": 2,               # µb=1 cuts collectives 33% but OOMs (19.8 GB)
+    "rwkv6-7b": 1,                # §Perf: 2→1 confirmed (−26% collective, fits)
+    "zamba2-2.7b": 2,             # µb=1 OOMs (23.0 GB)
+}
+
+
+def _override_reps(cfg, reps_map: dict[int, int]):
+    """Config variant with per-stage rep counts replaced (cost calibration)."""
+    import dataclasses
+    from repro.models.config import Stage
+    stages = tuple(
+        Stage(unit=s.unit, reps=reps_map.get(i, s.reps))
+        for i, s in enumerate(cfg.stages))
+    enc = tuple(
+        Stage(unit=s.unit, reps=reps_map.get(("enc", i), s.reps))
+        for i, s in enumerate(cfg.encoder_stages))
+    return dataclasses.replace(cfg, stages=stages, encoder_stages=enc)
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                donate: bool = True, extra_shard_ctx=None,
+                unroll: bool = False, reps_map: dict | None = None):
+    cfg = get_config(arch)
+    if reps_map is not None:
+        cfg = _override_reps(cfg, reps_map)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multipod": multi_pod,
+                "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    num_chips = mesh.size
+    shard_ctx = activation_shard_ctx(
+        cfg, mesh, shape.seq_len, shape.global_batch)
+    if extra_shard_ctx:
+        shard_ctx.update(extra_shard_ctx)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        p_sds = params_specs(cfg)                      # fp32 master
+        p_sh = param_shardings(p_sds, mesh)
+        shard_ctx["params_sh"] = p_sh                  # bf16 cast stays sharded
+        o_sds = jax.eval_shape(lambda: AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), p_sds),
+            nu=jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), p_sds)))
+        o_sh = opt_shardings(p_sh, mesh)
+        b_sds = input_specs(cfg, shape)
+        b_sh = batch_shardings(b_sds, mesh)
+        step = T.make_train_step(cfg, AdamWConfig(lr=3e-4),
+                                 shard_ctx=shard_ctx,
+                                 compute_dtype=jnp.bfloat16, unroll=unroll,
+                                 microbatches=TRAIN_MICROBATCHES.get(
+                                     arch, 1),
+                                 bf16_grads=BF16_GRADS)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1) if donate else ())
+        lowered = fn.lower(p_sds, o_sds, b_sds)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+    elif shape.kind == "prefill":
+        p_sds = params_specs(cfg, dtype=jnp.bfloat16)  # serving weights
+        p_sh = param_shardings(p_sds, mesh)
+        b_sds = input_specs(cfg, shape)
+        b_sh = batch_shardings(b_sds, mesh)
+
+        def prefill(params, batch):
+            logits, _ = T.forward(cfg, params, batch, shard_ctx=shard_ctx,
+                                  unroll=unroll)
+            return logits
+        fn = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+        lowered = fn.lower(p_sds, b_sds)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+    else:  # decode
+        p_sds = params_specs(cfg, dtype=jnp.bfloat16)
+        p_sh = param_shardings(p_sds, mesh)
+        io, cache_sds, _ = decode_specs(
+            cfg, shape,
+            cache_dtype=jnp.int8 if KV_INT8 else jnp.bfloat16)
+        c_sh = cache_shardings(cfg, cache_sds, mesh, shape.global_batch)
+        tok_sh = batch_shardings({"token": io["token"]}, mesh)["token"]
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        pos_sh = NamedSharding(mesh, P())
+
+        def serve_step(params, cache, token, pos):
+            return T.decode_step(cfg, params, cache, token, pos,
+                                 shard_ctx=shard_ctx, unroll=unroll)
+        fn = jax.jit(serve_step,
+                     in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(1,) if donate else ())
+        lowered = fn.lower(p_sds, cache_sds, io["token"], io["pos"])
+        tokens = shape.global_batch * 1
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    rf = RL.analyze(compiled, num_chips=num_chips, model_flops=model_flops,
+                    hlo_text=hlo)
+    mem_total = (mem.temp_size_in_bytes + mem.argument_size_in_bytes +
+                 mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    result = {
+        "arch": arch, "shape": shape_name, "multipod": multi_pod,
+        "num_chips": num_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": mem_total,
+            "fits_hbm": bool(mem_total <= HBM_PER_CHIP),
+        },
+        "roofline": RL.to_dict(rf),
+    }
+    return result
+
+
+def calibrated(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    """Full scanned compile (memory proof + schedule) + exact roofline.
+
+    ``cost_analysis`` counts a while-loop (scan) body once, not
+    ×trip-count, so the scanned numbers undercount. We calibrate with tiny
+    *unrolled* variants: A = all stages at 1 rep, and per-stage variants at
+    2 reps; body_s = variant_s − A; exact = A + Σ (reps_s − 1)·body_s.
+    Exact for FLOPs; near-exact for bytes/collectives (layout may shift
+    slightly between variants — noted in EXPERIMENTS.md)."""
+    full = lower_combo(arch, shape_name, multi_pod)
+    if "skipped" in full:
+        return full
+    cfg = get_config(arch)
+    keys = list(range(len(cfg.stages))) + \
+        [("enc", i) for i in range(len(cfg.encoder_stages))]
+    reps_of = {}
+    for i, s in enumerate(cfg.stages):
+        reps_of[i] = s.reps
+    for i, s in enumerate(cfg.encoder_stages):
+        reps_of[("enc", i)] = s.reps
+    base_map = {k: 1 for k in keys}
+    a = lower_combo(arch, shape_name, multi_pod, unroll=True,
+                    reps_map=base_map)
+
+    def raw(res):
+        r = res["roofline"]
+        out = {"flops": r["flops_per_device"], "bytes": r["bytes_per_device"],
+               "coll": r["coll_bytes_per_device"]}
+        out.update({f"c_{k}": v for k, v in r["coll_breakdown"].items()})
+        return out
+
+    totals = dict(raw(a))
+    calib = {"A_compile_s": a["compile_s"], "variants": []}
+    for k in keys:
+        if reps_of[k] <= 1:
+            continue
+        vmap = dict(base_map)
+        vmap[k] = 2
+        v = lower_combo(arch, shape_name, multi_pod, unroll=True,
+                        reps_map=vmap)
+        body = {kk: max(0.0, raw(v)[kk] - raw(a)[kk]) for kk in raw(a)}
+        calib["variants"].append({"stage": str(k), "reps": reps_of[k],
+                                  "compile_s": v["compile_s"],
+                                  "body": body})
+        for kk in totals:
+            totals[kk] += (reps_of[k] - 1) * body[kk]
+
+    rf = full["roofline"]
+    model_flops = rf["model_flops"]
+    compute_s = totals["flops"] / RL.PEAK_FLOPS
+    memory_s = totals["bytes"] / RL.HBM_BW
+    collective_s = totals["coll"] / RL.ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    full["roofline_exact"] = {
+        "flops_per_device": totals["flops"],
+        "bytes_per_device": totals["bytes"],
+        "coll_bytes_per_device": totals["coll"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": max(terms, key=terms.get),
+        "model_flops": model_flops,
+        "useful_flops_ratio": model_flops / max(
+            totals["flops"] * full["num_chips"], 1.0),
+        "coll_breakdown": {k[2:]: v for k, v in totals.items()
+                           if k.startswith("c_") and k != "c_count"},
+        "calibration": calib,
+    }
+    return full
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="scanned compile only, skip roofline calibration")
+    # §Perf experiment toggles
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-ye-constraint", action="store_true")
+    ap.add_argument("--no-upcast-kv", action="store_true")
+    ap.add_argument("--moe-bf16-reduce", action="store_true")
+    ap.add_argument("--f32-grads", action="store_true",
+                    help="paper-faithful f32 backward (the §Perf baseline)")
+    ap.add_argument("--moe-group", type=int, default=None)
+    ap.add_argument("--kv-int8", action="store_true")
+    args = ap.parse_args(argv)
+    if args.moe_bf16_reduce:
+        import repro.models.ffn as _ffn2
+        _ffn2.BF16_REDUCE = True
+    if args.f32_grads:
+        global BF16_GRADS
+        BF16_GRADS = False
+    if args.moe_group:
+        import repro.models.ffn as _ffn3
+        _ffn3.MOE_GROUP = args.moe_group
+    if args.kv_int8:
+        global KV_INT8
+        KV_INT8 = True
+    if args.microbatches is not None:
+        TRAIN_MICROBATCHES[args.arch] = args.microbatches
+    if args.no_ye_constraint:
+        import repro.models.ffn as _ffn
+        _ffn.YE_CONSTRAINT = False
+    if args.no_upcast_kv:
+        import repro.models.attention as _attn
+        _attn.UPCAST_KV = False
+    if args.fast:
+        res = lower_combo(args.arch, args.shape, args.multipod)
+    else:
+        res = calibrated(args.arch, args.shape, args.multipod)
+    print(json.dumps(res, indent=2, default=str))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+    if "skipped" not in res and not res["memory"]["fits_hbm"]:
+        print("WARNING: does not fit HBM", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

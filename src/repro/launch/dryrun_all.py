@@ -1,0 +1,95 @@
+"""Sweep driver: every (arch × shape × mesh) dry-run combo in subprocesses.
+
+Single-pod runs get the full roofline calibration; multi-pod runs prove the
+'pod' axis shards (scanned compile only, --fast) per the assignment: the
+roofline table is single-pod only.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_all --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "qwen3-0.6b", "qwen3-1.7b", "h2o-danube-1.8b", "seamless-m4t-large-v2",
+    "zamba2-2.7b", "gemma2-9b", "deepseek-v2-lite-16b", "mixtral-8x7b",
+    "internvl2-26b", "rwkv6-7b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_one(arch: str, shape: str, multipod: bool, out_dir: str,
+            timeout: int = 3000) -> dict:
+    tag = f"{arch}_{shape}_{'pod2' if multipod else 'pod1'}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--json", path]
+    if multipod:
+        cmd += ["--multipod", "--fast"]
+    t0 = time.time()
+    env = dict(os.environ)
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=env)
+    took = time.time() - t0
+    if not os.path.exists(path):
+        err = {"arch": arch, "shape": shape, "multipod": multipod,
+               "error": proc.stderr[-3000:], "took_s": round(took, 1)}
+        with open(path, "w") as f:
+            json.dump(err, f, indent=2)
+        return err
+    with open(path) as f:
+        res = json.load(f)
+    res["took_s"] = round(took, 1)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-multipod", action="store_true")
+    ap.add_argument("--only-multipod", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    pods = []
+    if not args.only_multipod:
+        pods.append(False)
+    if not args.skip_multipod:
+        pods.append(True)
+    total = ok = 0
+    for multipod in pods:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                total += 1
+                try:
+                    res = run_one(arch, shape, multipod, args.out)
+                except subprocess.TimeoutExpired:
+                    res = {"error": "timeout"}
+                if "skipped" in res:
+                    status = "SKIP(" + res["skipped"][:40] + ")"
+                    ok += 1
+                elif "error" in res:
+                    status = "ERROR"
+                else:
+                    fits = res["memory"]["fits_hbm"]
+                    status = (f"ok compile={res['compile_s']}s "
+                              f"peak={res['memory']['peak_bytes']/1e9:.1f}GB "
+                              f"fits={fits}")
+                    ok += 1 if fits else 0
+                print(f"[{total:3d}] {arch:24s} {shape:12s} "
+                      f"{'pod2' if multipod else 'pod1'}  {status}",
+                      flush=True)
+    print(f"done: {ok}/{total} ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / link_bw
+
+``cost_analysis`` operates on the partitioned (per-device) module, so the
+terms above are already per-chip; the prompt's "…/(chips × …)" form is the
+same quantity. Collective bytes are not in cost_analysis — we parse the
+compiled HLO text and sum result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op (an
+operand-side approximation, noted in EXPERIMENTS.md).
+
+CAVEAT (EXPERIMENTS.md §Perf): the CPU backend legalizes bf16 → f32 during
+compilation, so bytes for bf16 traffic are counted at f32 width — terms
+are ~2× pessimistic in absolute value for bf16 quantities; relative
+comparisons across combos remain valid.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s
+HBM_BW = 819e9           # B/s
+ICI_BW = 50e9            # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind from HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        for kind in _COLLECTIVES:
+            # match '= TYPE kind(' — the op use, not metadata mentions
+            m = re.search(r"=\s+(.+?)\s+" + kind + r"(-start|-done)?\(", line)
+            if m:
+                if m.group(2) == "-done":
+                    continue          # counted at -start
+                out[kind] += _shape_bytes(m.group(1))
+                out["count"] += 1
+                break
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_ratio: float
+    coll_breakdown: dict
+
+
+def analyze(compiled, *, num_chips: int, model_flops: float,
+            hlo_text: str | None = None) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    cbytes = float(sum(v for k, v in coll.items() if k != "count"))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * num_chips, 1.0)
+    return Roofline(flops, byts, cbytes, compute_s, memory_s, collective_s,
+                    bottleneck, model_flops, useful, coll)
+
+
+def to_dict(r: Roofline) -> dict:
+    return asdict(r)

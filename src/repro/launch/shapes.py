@@ -1,0 +1,87 @@
+"""The four assigned input shapes + ShapeDtypeStruct input specs.
+
+``input_specs`` returns abstract stand-ins (weak-type-correct, shardable,
+no device allocation) for every model input; the modality frontends are
+stubbed exactly here — VLM patch embeddings / audio frame embeddings appear
+as precomputed [B, P, dim] inputs per the assignment carve-out.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether this (arch, shape) pair runs (DESIGN.md §Arch-applicability)."""
+    if shape.name == "long_500k" and not cfg.long_context_ok:
+        return False, "pure full-attention family: long_500k skipped " \
+                      "(see DESIGN.md decode-shape table)"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Batch input ShapeDtypeStructs for train/prefill kinds."""
+    b, s = shape.global_batch, shape.seq_len
+    batch: dict = {}
+    text = s
+    if cfg.num_prefix_tokens and cfg.prefix_dim:
+        text = s - cfg.num_prefix_tokens           # VLM: patches + text = S
+        batch["prefix_emb"] = _sds((b, cfg.num_prefix_tokens,
+                                    cfg.prefix_dim), jnp.bfloat16)
+    if cfg.encoder_stages:
+        batch["frames"] = _sds((b, cfg.encoder_seq_len, cfg.prefix_dim),
+                               jnp.bfloat16)
+    batch["tokens"] = _sds((b, text), jnp.int32)
+    if shape.kind == "train":
+        batch["targets"] = _sds((b, text), jnp.int32)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape,
+                 cache_dtype=jnp.bfloat16) -> tuple[dict, object, object]:
+    """(token/pos specs, cache specs) for decode kinds — via eval_shape so
+    nothing is allocated."""
+    b, s = shape.global_batch, shape.seq_len
+    token = _sds((b, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    cache = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, max_len=s, dtype=cache_dtype))
+    return {"token": token, "pos": pos}, cache, None
+
+
+def params_specs(cfg: ModelConfig, dtype=None):
+    """Abstract params (eval_shape of init), optionally re-typed (bf16 for
+    serving, fp32 master for training)."""
+    sds = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    if dtype is None:
+        return sds
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, dtype if jnp.issubdtype(x.dtype, jnp.floating)
+            else x.dtype), sds)

@@ -1,0 +1,161 @@
+"""GSPMD sharding rules (MaxText-flavored FSDP + TP).
+
+* params: 2-D weight matrices shard [in → 'data' (FSDP/ZeRO), out → 'model'
+  (TP)] where divisible; embeddings [vocab → 'model', d → 'data']; MoE
+  expert tensors use expert-parallel over 'model' when the expert count
+  divides the axis (deepseek 64e), else TP inside the expert (mixtral 8e).
+  Optimizer state mirrors the params (ZeRO falls out for free).
+* batch: [('pod','data'), …]; batch-1 shapes (long_500k) replicate batch.
+* residual stream: [batch, 'model', d] — Megatron-style sequence parallel.
+* decode caches: [batch-sharded B, sequence → 'model' (+'data' when B = 1),
+  heads/state → 'model' where divisible].
+
+Every rule degrades to replication when a dim is not divisible by the mesh
+axis, so any (arch × shape × mesh) combination lowers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, batch_axes
+from repro.optim.adamw import AdamState
+
+
+def _maybe(axis, dim: int, mesh) -> str | None:
+    """Use ``axis`` only if ``dim`` divides evenly on the mesh."""
+    if axis is None:
+        return None
+    sizes = [axis_size(mesh, a) for a in
+             (axis if isinstance(axis, tuple) else (axis,))]
+    total = 1
+    for s in sizes:
+        total *= s
+    return axis if total > 1 and dim % total == 0 else None
+
+
+# base specs by parameter name (without scan-stacking leading dims)
+_IN_OUT = ("data", "model")        # [in, out]
+_OUT_IN = ("model", "data")        # [out, in]
+_RULES: dict[str, tuple] = {
+    "embed": ("model", "data"),
+    "lm_head": _IN_OUT,
+    "prefix_proj": _IN_OUT,
+    "in_proj": _IN_OUT,
+    "wq": _IN_OUT,
+    "wk": ("data", None),
+    "wv": ("data", None),
+    "wo": _OUT_IN,
+    "w_gate": _IN_OUT, "w_up": _IN_OUT, "w_down": _OUT_IN,
+    "router": ("data", None),
+    "w_dkv": ("data", None),
+    "w_uk": (None, "model", None),
+    "w_uv": (None, "model", None),
+    "w_in": _IN_OUT, "w_out": _OUT_IN,
+    "conv_w": (None, "model"),
+    "w_r": _IN_OUT, "w_k": _IN_OUT, "w_v": _OUT_IN, "w_g": _IN_OUT,
+    "w_o": _IN_OUT,
+    "w_lora_a": ("data", None), "w_lora_b": (None, "model"),
+}
+
+
+def _spec_for_leaf(path, shape, mesh) -> P:
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = names[-1]
+    nd = len(shape)
+    if name in ("we_gate", "we_up", "we_down"):
+        e = shape[-3]
+        if _maybe("model", e, mesh):
+            base = ("model", "data", None) if name != "we_down" else \
+                ("model", None, "data")
+        else:
+            base = (None, "data", "model") if name != "we_down" else \
+                (None, "model", "data")
+    elif name in _RULES:
+        base = _RULES[name]
+    else:
+        base = ()                     # norms, biases, scalars: replicate
+    base = tuple(base[-nd:]) if nd >= len(base) else tuple(base[:nd])
+    pad = (None,) * (nd - len(base))
+    dims = shape[nd - len(base):]
+    resolved = tuple(_maybe(a, d, mesh) for a, d in zip(base, dims))
+    return P(*(pad + resolved))
+
+
+def param_shardings(params, mesh):
+    """NamedSharding tree mirroring ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = [NamedSharding(mesh, _spec_for_leaf(p, l.shape, mesh))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_shardings(param_sh, mesh):
+    scalar = NamedSharding(mesh, P())
+    return AdamState(step=scalar, mu=param_sh,
+                     nu=jax.tree_util.tree_map(lambda s: s, param_sh))
+
+
+def batch_shardings(batch_sds, mesh):
+    """Shard the leading batch dim over ('pod','data') where divisible."""
+    ba = batch_axes(mesh)
+
+    def spec(sds):
+        b = sds.shape[0]
+        axis = _maybe(ba, b, mesh)
+        return NamedSharding(mesh, P(axis, *([None] * (len(sds.shape) - 1))))
+    return jax.tree_util.tree_map(spec, batch_sds)
+
+
+def activation_shard_ctx(cfg, mesh, seq_len: int, batch: int) -> dict:
+    """shard_ctx passed into forward/decode (residual-stream constraints)."""
+    ba = _maybe(batch_axes(mesh), batch, mesh)
+    seq = _maybe("model", seq_len, mesh)
+    return {
+        "residual": NamedSharding(mesh, P(ba, seq, None)),
+        "decode_residual": NamedSharding(mesh, P(ba, None, None)),
+        # MoE dispatch operands: batch over data; expert/cap/d left to TP
+        "moe_tok": NamedSharding(mesh, P(ba, None, None)),
+        "moe_route": NamedSharding(mesh, P(ba, None, None)),
+        # expert buffers follow the expert-weight sharding: EP over 'model'
+        # when the expert count divides the axis (deepseek 64e), else TP on
+        # the expert hidden dim (mixtral 8e)
+        "moe_xe": NamedSharding(mesh, P(
+            ba, _maybe("model", cfg.num_experts, mesh), None, None)),
+        "moe_he": NamedSharding(mesh, P(
+            ba, _maybe("model", cfg.num_experts, mesh), None,
+            None if _maybe("model", cfg.num_experts, mesh) else "model")),
+    }
+
+
+def cache_shardings(cfg, cache, mesh, batch: int):
+    """Decode-cache sharding: leaves are [reps, B, ...]."""
+    ba = _maybe(batch_axes(mesh), batch, mesh)
+    seq_axes = "model" if ba is not None else ("data", "model")
+
+    def spec(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        shp = leaf.shape
+        if name in ("k", "v"):                       # [reps,B,W,kv,dh]
+            if len(shp) == 5:
+                return P(None, ba, _maybe(seq_axes, shp[2], mesh), None, None)
+            return P(ba, _maybe(seq_axes, shp[1], mesh), None, None)
+        if name in ("c_kv", "k_rope"):               # [reps,B,W,r]
+            return P(None, ba, _maybe(seq_axes, shp[2], mesh), None)
+        if name in ("k_scale", "v_scale"):           # [reps,B,W,kv]
+            return P(None, ba, _maybe(seq_axes, shp[2], mesh), None)
+        if name == "pos":
+            return P(*([None] * len(shp)))
+        if name == "state":                          # [reps,B,H,P,N]
+            return P(None, ba, _maybe("model", shp[2], mesh), None, None)
+        if name == "conv":                           # [reps,B,K,C]
+            return P(None, ba, None, _maybe("model", shp[3], mesh))
+        if name in ("x_prev", "cm_prev"):            # [reps,B,1,d]
+            return P(None, ba, None, None)
+        return P(*([None] * len(shp)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = [NamedSharding(mesh, spec(p, l)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,94 @@
+"""Framework training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --reduced --steps 50 [--ckpt /tmp/lm.npz]
+
+Runs the same ``make_train_step`` the multi-pod dry-run lowers — on this
+CPU container with ``--reduced`` dims; on a real TPU slice the identical
+code path runs the full config under ``make_production_mesh()`` with the
+FSDP+TP+SP shardings (``--production`` wires them; it requires the real
+device count and is exercised offline by the dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs.registry import get_config, list_archs
+from repro.data.tokens import TokenDataConfig, token_batches
+from repro.models import transformer as T
+from repro.models.config import reduced as reduce_cfg
+from repro.optim.adamw import AdamWConfig, cosine_schedule
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list_archs())
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--production", action="store_true",
+                    help="full config on make_production_mesh() (TPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shard_ctx = None
+    in_shardings = None
+    if args.production:
+        from repro.launch.mesh import make_production_mesh
+        from repro.launch.shardings import (activation_shard_ctx,
+                                            param_shardings)
+        mesh = make_production_mesh()
+        shard_ctx = activation_shard_ctx(cfg, mesh, args.seq, args.batch)
+    else:
+        cfg = reduce_cfg(cfg, d_model=args.d_model)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(cfg, key)
+    opt = T.init_opt(params)
+    opt_cfg = AdamWConfig(
+        lr=cosine_schedule(args.lr, args.warmup, args.steps),
+        weight_decay=0.01)
+    step = jax.jit(T.make_train_step(
+        cfg, opt_cfg, shard_ctx=shard_ctx,
+        compute_dtype=jnp.bfloat16 if args.production else None,
+        microbatches=args.microbatches))
+
+    data = token_batches(TokenDataConfig(vocab_size=cfg.vocab_size,
+                                         seq_len=args.seq,
+                                         batch_size=args.batch,
+                                         seed=args.seed))
+    extras = {}
+    if cfg.num_prefix_tokens and cfg.prefix_dim:
+        extras["prefix_emb"] = 0.02 * jax.random.normal(
+            key, (args.batch, cfg.num_prefix_tokens, cfg.prefix_dim))
+    if cfg.encoder_stages:
+        extras["frames"] = 0.02 * jax.random.normal(
+            key, (args.batch, cfg.encoder_seq_len, cfg.prefix_dim))
+
+    t0 = time.time()
+    for i, batch in zip(range(args.steps), data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()} | extras
+        params, opt, m = step(params, opt, batch)
+        if (i + 1) % max(args.steps // 10, 1) == 0:
+            tps = args.batch * args.seq * (i + 1) / (time.time() - t0)
+            print(f"step {i + 1:5d}  loss {float(m['loss']):.4f}  "
+                  f"{tps:,.0f} tok/s", flush=True)
+    if args.ckpt:
+        ckpt.save(args.ckpt, {"params": params})
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,314 @@
+"""Attention mixers: GQA (with qk-norm / sliding window / logit softcap),
+MLA (DeepSeek-V2 compressed KV, absorbed decode path), and cross-attention.
+
+Prefill/train attention is computed in query chunks (``lax.map`` over Q
+blocks) so the [S, S] score matrix is never fully materialized — the pure-
+XLA analogue of flash attention that the dry-run lowers (the Pallas flash
+kernel in ``repro/kernels/flash_attention`` is the TPU hot path and is
+validated against the same math).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nnlib.core import normal_init, rmsnorm_init, rmsnorm_apply
+
+Q_CHUNK = 1024     # static query block for chunked attention
+
+# §Perf toggle: upcast k/v to f32 before the score/context einsums (True =
+# baseline) vs keeping bf16 operands with f32 accumulation via
+# preferred_element_type (False) — halves the HBM traffic of the upcast
+# copies (EXPERIMENTS.md §Perf-3).
+UPCAST_KV = True
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: jnp.ndarray, dim: int, theta: float
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [...,] → cos/sin [..., dim/2]."""
+    freq = 1.0 / theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """x [..., S, H, dh]; cos/sin [..., S, dh/2] (broadcast over heads)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+def _softcap(scores: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": normal_init(ks[0], (d, h * dh), std=d ** -0.5),
+        "wk": normal_init(ks[1], (d, kv * dh), std=d ** -0.5),
+        "wv": normal_init(ks[2], (d, kv * dh), std=d ** -0.5),
+        "wo": normal_init(ks[3], (h * dh, d), std=(h * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh)
+        p["k_norm"] = rmsnorm_init(dh)
+    return p
+
+
+def _chunked_scores_softmax(q, k, v, *, offset, causal, window, softcap,
+                            kv_pos=None):
+    """q [B,Sq,H,dh] against full k/v [B,Sk,KV,dh] in query chunks.
+
+    offset: absolute position of q[0]. kv_pos: [Sk] absolute key positions
+    (defaults to arange). Returns [B,Sq,H,dh]."""
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kvh
+    scale = dh ** -0.5
+    kv_pos = jnp.arange(sk) if kv_pos is None else kv_pos
+    qc = Q_CHUNK if sq % Q_CHUNK == 0 and sq > Q_CHUNK else sq
+
+    def block(args):
+        qb, qpos = args                     # [B,qc,H,dh], [qc]
+        qg = qb.reshape(b, qc, kvh, g, dh)
+        if UPCAST_KV:
+            s = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.float32),
+                           k.astype(jnp.float32)) * scale
+        else:
+            s = jnp.einsum("bqkgd,bskd->bqkgs", qg, k,
+                           preferred_element_type=jnp.float32) * scale
+        s = _softcap(s, softcap)
+        m = jnp.ones((qc, sk), bool)
+        if causal:
+            m &= qpos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            m &= qpos[:, None] - kv_pos[None, :] < window
+        m &= kv_pos[None, :] >= 0           # −1 marks empty cache slots
+        s = jnp.where(m[None, :, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        if UPCAST_KV:
+            o = jnp.einsum("bqkgs,bskd->bqkgd", p, v.astype(jnp.float32))
+        else:
+            o = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(q.dtype), v,
+                           preferred_element_type=jnp.float32)
+        return o.reshape(b, qc, h, dv).astype(q.dtype)
+
+    if qc == sq:
+        return block((q, offset + jnp.arange(sq)))
+    nc = sq // qc
+    qs = q.reshape(b, nc, qc, h, dh).swapaxes(0, 1)
+    pos = (offset + jnp.arange(sq)).reshape(nc, qc)
+    out = jax.lax.map(block, (qs, pos))
+    return out.swapaxes(0, 1).reshape(b, sq, h, dv)
+
+
+def gqa_apply(cfg, spec, p, x, *, positions, cache=None):
+    """x [B,S,d]. cache: None (train/prefill w/o cache) or dict for decode.
+
+    Returns (out [B,S,d], new_cache)."""
+    b, s, d = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(p["k_norm"], k, cfg.norm_eps)
+    cos, sin = rope_cos_sin(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        out = _chunked_scores_softmax(
+            q, k, v, offset=0, causal=True, window=spec.window,
+            softcap=cfg.attn_logit_softcap)
+        new_cache = None
+    else:
+        # decode: s == 1; ring-buffer cache of width W
+        w = cache["k"].shape[1]
+        pos = positions[0]                   # scalar absolute position
+        slot = pos % w
+        quant = "k_scale" in cache
+        if quant:
+            k_q, k_s = _quantize_kv(k)
+            v_q, v_s = _quantize_kv(v)
+            kw, vw = k_q, v_q
+        else:
+            kw, vw = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kw, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vw, (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                            pos[None].astype(jnp.int32),
+                                            (slot,))
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        if quant:
+            cks = jax.lax.dynamic_update_slice(cache["k_scale"], k_s,
+                                               (0, slot, 0))
+            cvs = jax.lax.dynamic_update_slice(cache["v_scale"], v_s,
+                                               (0, slot, 0))
+            new_cache["k_scale"] = cks
+            new_cache["v_scale"] = cvs
+            kr = ck.astype(jnp.bfloat16) * cks[..., None]
+            vr = cv.astype(jnp.bfloat16) * cvs[..., None]
+        else:
+            kr, vr = ck, cv
+        out = _chunked_scores_softmax(
+            q, kr, vr, offset=pos, causal=True, window=spec.window,
+            softcap=cfg.attn_logit_softcap, kv_pos=cpos)
+    return (out.reshape(b, s, h * dh) @ p["wo"]), new_cache
+
+
+def gqa_cache_init(cfg, spec, batch: int, max_len: int, dtype=jnp.bfloat16
+                   ) -> dict:
+    """dtype=jnp.int8 → quantized cache (per-token-per-head symmetric
+    scales) — §Perf-3 optimization, halves cache HBM traffic on TPU."""
+    w = max_len if spec.window is None else min(spec.window, max_len)
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    c = {"k": jnp.zeros((batch, w, kv, dh), dtype),
+         "v": jnp.zeros((batch, w, kv, dh), dtype),
+         "pos": jnp.full((w,), -1, jnp.int32)}
+    if dtype == jnp.int8:
+        c["k_scale"] = jnp.zeros((batch, w, kv), jnp.bfloat16)
+        c["v_scale"] = jnp.zeros((batch, w, kv), jnp.bfloat16)
+    return c
+
+
+def _quantize_kv(x):
+    """x [B,1,kv,dh] → (int8 values, [B,1,kv] scale)."""
+    scale = jnp.max(jnp.abs(x), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def cross_init(key, cfg) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": normal_init(ks[0], (d, h * dh), std=d ** -0.5),
+        "wk": normal_init(ks[1], (d, kv * dh), std=d ** -0.5),
+        "wv": normal_init(ks[2], (d, kv * dh), std=d ** -0.5),
+        "wo": normal_init(ks[3], (h * dh, d), std=(h * dh) ** -0.5),
+    }
+
+
+def cross_apply(cfg, p, x, enc_kv):
+    """x [B,S,d] attends (unmasked) over precomputed encoder k/v."""
+    b, s, _ = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    out = _chunked_scores_softmax(q, enc_kv["k"], enc_kv["v"], offset=0,
+                                  causal=False, window=None, softcap=None)
+    return out.reshape(b, s, h * dh) @ p["wo"]
+
+
+def cross_kv(cfg, p, enc_out):
+    b, se, _ = enc_out.shape
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    return {"k": (enc_out @ p["wk"]).reshape(b, se, kv, dh),
+            "v": (enc_out @ p["wv"]).reshape(b, se, kv, dh)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed KV cache + absorbed decode
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": normal_init(ks[0], (d, h * (dn + dr)), std=d ** -0.5),
+        "w_dkv": normal_init(ks[1], (d, r + dr), std=d ** -0.5),
+        "w_uk": normal_init(ks[2], (r, h, dn), std=r ** -0.5),
+        "w_uv": normal_init(ks[3], (r, h, dv), std=r ** -0.5),
+        "wo": normal_init(ks[4], (h * dv, d), std=(h * dv) ** -0.5),
+        "kv_norm": rmsnorm_init(r),
+    }
+
+
+def mla_apply(cfg, spec, p, x, *, positions, cache=None):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                     cfg.v_head_dim)
+    scale = (dn + dr) ** -0.5
+    q = (x @ p["wq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckr = x @ p["w_dkv"]
+    c_kv = rmsnorm_apply(p["kv_norm"], ckr[..., :r], cfg.norm_eps)
+    k_rope = ckr[..., r:][:, :, None, :]            # [B,S,1,dr] shared head
+    cos, sin = rope_cos_sin(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0]  # [B,S,dr]
+
+    if cache is None:
+        # prefill: expand the latent to per-head k/v (kv heads = h)
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uk"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, dr))], -1)
+        v = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uv"])
+        q_full = jnp.concatenate([q_nope, q_rope], -1)   # roped rope-part
+        out = _chunked_scores_softmax(q_full, k, v, offset=0, causal=True,
+                                      window=spec.window, softcap=None)
+        new_cache = None
+    else:
+        # decode: absorbed attention in the r-dim latent space
+        pos = positions[0]
+        w = cache["c_kv"].shape[1]
+        slot = pos % w
+        cc = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype)[:, :1],
+            (0, slot, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype)[:, :1],
+            (0, slot, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                            pos[None].astype(jnp.int32),
+                                            (slot,))
+        q_lat = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
+                           p["w_uk"].astype(jnp.float32))
+        sc = jnp.einsum("bthr,bsr->bths", q_lat,
+                        cc.astype(jnp.float32)) + \
+            jnp.einsum("bthp,bsp->bths", q_rope.astype(jnp.float32),
+                       cr.astype(jnp.float32))
+        sc = sc * scale
+        mask = (cpos >= 0) & (cpos <= pos)
+        sc = jnp.where(mask[None, None, None, :], sc, -1e30)
+        pr = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum("bths,bsr->bthr", pr, cc.astype(jnp.float32))
+        out = jnp.einsum("bthr,rhv->bthv", ctx,
+                         p["w_uv"].astype(jnp.float32)).astype(x.dtype)
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": cpos}
+    return out.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+def mla_cache_init(cfg, spec, batch: int, max_len: int, dtype=jnp.bfloat16
+                   ) -> dict:
+    return {"c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+            "pos": jnp.full((max_len,), -1, jnp.int32)}

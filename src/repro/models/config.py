@@ -1,0 +1,185 @@
+"""Model configuration for the assigned-architecture stack.
+
+A model is a sequence of **stages**; each stage is a repeated **unit** of
+layer specs and is lowered as one ``lax.scan`` over stacked params (keeps
+the HLO small enough to GSPMD-partition 80 dry-run combos on one CPU core,
+and gives per-unit remat). Heterogeneous patterns (gemma2 local/global,
+zamba2 mamba+shared-attention, deepseek first-dense) are expressed as
+multi-layer units / prefix stages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside a stage unit."""
+    mixer: str = "attn"          # attn | mla | mamba2 | rwkv6 | none
+    ffn: str = "dense"           # dense | moe | rwkv_cm | none
+    window: int | None = None    # sliding-window size (None = full attention)
+    cross_attn: bool = False     # decoder layer with encoder cross-attention
+    post_norm: bool = False      # gemma2-style post-block RMSNorm
+
+
+@dataclass(frozen=True)
+class Stage:
+    unit: tuple[LayerSpec, ...]
+    reps: int
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.unit) * self.reps
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str               # dense | moe | hybrid | ssm | vlm | audio
+    d_model: int
+    vocab_size: int
+    stages: tuple[Stage, ...]
+    # attention
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    qk_norm: bool = False
+    attn_logit_softcap: float | None = None
+    final_logit_softcap: float | None = None
+    rope_theta: float = 10000.0
+    # ffn
+    d_ff: int = 0
+    # MLA (deepseek)
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # RWKV6
+    rwkv_head_dim: int = 64
+    # encoder-decoder (seamless)
+    encoder_stages: tuple[Stage, ...] = ()
+    encoder_seq_len: int = 0     # stub frame count fed to the encoder
+    # multimodal prefix (internvl)
+    num_prefix_tokens: int = 0
+    prefix_dim: int = 0          # stub frontend embedding dim
+    # misc
+    norm_eps: float = 1e-6
+    embed_scale: bool = False    # gemma-style sqrt(d) embedding scale
+    long_context_ok: bool = False  # may run the long_500k shape (DESIGN.md)
+    source: str = ""             # citation for the config numbers
+
+    @property
+    def num_layers(self) -> int:
+        return sum(s.num_layers for s in self.stages)
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab_size // 16) * 16   # divisible by the model axis
+
+    def layer_specs(self) -> list[LayerSpec]:
+        out = []
+        for s in self.stages:
+            out.extend(list(s.unit) * s.reps)
+        return out
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for MODEL_FLOPS in §Roofline)."""
+        d = self.d_model
+        n = 2 * self.padded_vocab * d            # embed + head
+        for spec in self.layer_specs():
+            if spec.mixer == "attn":
+                n += d * self.num_heads * self.head_dim * 2        # q, o
+                n += d * self.num_kv_heads * self.head_dim * 2     # k, v
+            elif spec.mixer == "mla":
+                r, dn, dr, dv = (self.kv_lora_rank, self.qk_nope_dim,
+                                 self.qk_rope_dim, self.v_head_dim)
+                h = self.num_heads
+                n += d * h * (dn + dr)                             # q
+                n += d * (r + dr) + r * h * (dn + dv)              # kv lora
+                n += h * dv * d                                    # o
+            elif spec.mixer == "mamba2":
+                din = self.ssm_expand * d
+                heads = din // self.ssm_headdim
+                n += d * (2 * din + 2 * self.ssm_state + heads) + din * d
+            elif spec.mixer == "rwkv6":
+                n += 5 * d * d + d * d                             # r,k,v,g,w,o
+            if spec.cross_attn:
+                n += d * self.num_heads * self.head_dim * 2
+                n += d * self.num_kv_heads * self.head_dim * 2
+            if spec.ffn == "dense":
+                n += 3 * d * self.d_ff
+            elif spec.ffn == "moe":
+                n += 3 * d * self.moe_d_ff * (self.num_experts +
+                                              self.num_shared_experts)
+                n += d * self.num_experts
+            elif spec.ffn == "rwkv_cm":
+                n += 2 * d * self.d_ff + d * d
+        for s in self.encoder_stages:
+            for spec in list(s.unit) * s.reps:
+                n += d * self.num_heads * self.head_dim * 2
+                n += d * self.num_kv_heads * self.head_dim * 2
+                n += 3 * d * self.d_ff
+        return n
+
+    def active_param_count(self) -> int:
+        """Params active per token (MoE counts top-k + shared experts)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        moe_layers = sum(1 for s in self.layer_specs() if s.ffn == "moe")
+        all_e = 3 * self.d_model * self.moe_d_ff * self.num_experts
+        act_e = 3 * self.d_model * self.moe_d_ff * self.num_experts_per_tok
+        return full - moe_layers * (all_e - act_e)
+
+
+def reduced(cfg: ModelConfig, d_model: int = 256, layers: int = 2,
+            d_ff: int = 512, experts: int = 4, vocab: int = 512,
+            ) -> ModelConfig:
+    """Smoke-test variant: same family, tiny dims (≤4 experts, ≤2 layers)."""
+    head_dim = 32
+    heads = max(2, min(4, cfg.num_heads or 4))
+    kv = max(1, min(heads, cfg.num_kv_heads or heads))
+    # keep one unit of each distinct stage, reps scaled down
+    stages = []
+    seen = 0
+    for s in cfg.stages:
+        if seen >= layers:
+            break
+        unit = s.unit[:max(1, layers - seen)]
+        stages.append(Stage(unit=unit, reps=1))
+        seen += len(unit)
+    enc_stages = tuple(Stage(unit=s.unit[:1], reps=1)
+                       for s in cfg.encoder_stages[:1])
+    return replace(
+        cfg, name=cfg.name + "-reduced", d_model=d_model, d_ff=d_ff,
+        vocab_size=vocab, stages=tuple(stages), encoder_stages=enc_stages,
+        num_heads=heads, num_kv_heads=kv, head_dim=head_dim,
+        kv_lora_rank=min(cfg.kv_lora_rank, 64) if cfg.kv_lora_rank else 0,
+        qk_nope_dim=32 if cfg.qk_nope_dim else 0,
+        qk_rope_dim=16 if cfg.qk_rope_dim else 0,
+        v_head_dim=32 if cfg.v_head_dim else 0,
+        num_experts=min(cfg.num_experts, experts) if cfg.num_experts else 0,
+        num_experts_per_tok=min(cfg.num_experts_per_tok, 2)
+        if cfg.num_experts_per_tok else 0,
+        num_shared_experts=min(cfg.num_shared_experts, 1),
+        moe_d_ff=128 if cfg.moe_d_ff else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_headdim=32 if cfg.ssm_state else 64,
+        ssm_chunk=32,
+        rwkv_head_dim=32,
+        encoder_seq_len=min(cfg.encoder_seq_len, 16),
+        num_prefix_tokens=min(cfg.num_prefix_tokens, 8),
+        prefix_dim=min(cfg.prefix_dim, 64) if cfg.prefix_dim else 0,
+    )

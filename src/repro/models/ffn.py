@@ -1,0 +1,178 @@
+"""FFN blocks: gated dense MLP, routed MoE, RWKV channel-mix.
+
+MoE uses scatter-based token dispatch (sort-free): top-k routing →
+position-within-expert via cumsum → scatter into [E, capacity, d] →
+batched expert matmuls → gather+combine. This avoids the O(T·E·cap)
+one-hot dispatch tensor (prohibitive at 65k tokens/device) while staying
+pure XLA so GSPMD can shard the expert dim (EP) or the expert hidden dim
+(TP) per the sharding rules.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nnlib.core import normal_init
+
+
+# ---------------------------------------------------------------------------
+# dense gated MLP (llama/qwen-style SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"w_gate": normal_init(ks[0], (d_model, d_ff), std=d_model ** -0.5),
+            "w_up": normal_init(ks[1], (d_model, d_ff), std=d_model ** -0.5),
+            "w_down": normal_init(ks[2], (d_ff, d_model), std=d_ff ** -0.5)}
+
+
+def mlp_apply(p, x):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# routed MoE (mixtral / deepseek-v2-lite)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    e = cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": normal_init(ks[0], (d, e), std=d ** -0.5),
+        "we_gate": normal_init(ks[1], (e, d, f), std=d ** -0.5),
+        "we_up": normal_init(ks[2], (e, d, f), std=d ** -0.5),
+        "we_down": normal_init(ks[3], (e, f, d), std=f ** -0.5),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, f * cfg.num_shared_experts)
+    return p
+
+
+def _constrain(x, shard_ctx, name):
+    if shard_ctx and name in shard_ctx:
+        return jax.lax.with_sharding_constraint(x, shard_ctx[name])
+    return x
+
+
+MOE_GROUP = 128      # routing-group size in slots (GShard-style).
+# §Perf: 256→128 confirmed −5.6% train compute term (dispatch-einsum FLOPs
+# scale with the group size) at equal capacity-drop behavior.
+
+# §Perf toggle: pin ye (down-proj output) to the replicated-d layout.
+# True = baseline; False lets the f-contraction's partial sums propagate to
+# the sequence-sharded residual so GSPMD can reduce-scatter instead of
+# all-reduce (see EXPERIMENTS.md §Perf-1).
+YE_CONSTRAINT = True
+
+# §Perf toggle: accumulate the down-proj/combine einsums in bf16 so the TP
+# partial-sum all-reduce crosses ICI in bf16 instead of f32 (standard TPU
+# practice for TP reductions; MXU still accumulates f32 internally on HW).
+BF16_REDUCE = False
+
+
+def moe_apply(cfg, p, x, shard_ctx=None):
+    """x [B,S,d] → [B,S,d]; top-k routing, GShard-style einsum dispatch.
+
+    Token slots are split into routing groups of MOE_GROUP slots; within a
+    group the position-in-expert cumsum is local and dispatch/combine are
+    dense one-hot matmuls — everything shards cleanly under GSPMD (no
+    scatter, whose distributed lowering replicates operands). Capacity is
+    per group (C = cf·group/E); small groups (decode / smoke tests) run
+    dropless. The dispatch einsums cost O(T·k·d·cf·group) extra FLOPs —
+    visible in the roofline compute term and a deliberate trade (see
+    EXPERIMENTS.md §Perf for the sort-based alternative).
+    Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    logits = x @ p["router"]                         # [B, S, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gates, idx = jax.lax.top_k(probs, k)             # [B, S, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # drop any sequence sharding BEFORE the (B,S·k)→(G,group) reshape —
+    # GSPMD cannot split a dim sharded on one axis across a dim merged with
+    # another, and falls back to full all-gathers of the dispatch tensors
+    gates = _constrain(gates, shard_ctx, "moe_route")
+    idx = _constrain(idx, shard_ctx, "moe_route")
+    x = _constrain(x, shard_ctx, "moe_route")
+
+    slots = s * k                                    # slot order: (s, k)
+    group = MOE_GROUP if slots % MOE_GROUP == 0 and slots > MOE_GROUP \
+        else slots
+    gpr = slots // group                             # groups per row
+    ng = b * gpr
+    if group < MOE_GROUP:                            # small inputs (decode /
+        cap = group                                  # smoke): dropless
+    else:
+        cap = max(1, int(cfg.capacity_factor * group / e))
+
+    flat_e = idx.reshape(ng, group)                  # [G, gs]
+    gate_g = gates.reshape(ng, group)
+    onehot_e = jax.nn.one_hot(flat_e, e, dtype=jnp.float32)   # [G, gs, E]
+    pos = jnp.cumsum(onehot_e, axis=1) * onehot_e    # 1-based, per group
+    pos_sel = pos.max(-1) - 1.0                      # [G, gs]
+    keep = (pos_sel < cap) & (pos_sel >= 0)
+    onehot_c = jax.nn.one_hot(pos_sel.astype(jnp.int32), cap,
+                              dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("gse,gsc->gsec", onehot_e,
+                      onehot_c).astype(x.dtype)      # [G, gs, E, C]
+    comb = disp * gate_g[..., None, None].astype(x.dtype)
+
+    acc = x.dtype if BF16_REDUCE else None
+    xg = jnp.repeat(x, k, axis=1).reshape(ng, group, d)
+    xg = _constrain(xg, shard_ctx, "moe_tok")
+    xe = jnp.einsum("gsec,gsd->gecd", disp, xg,      # [G, E, C, d]
+                    preferred_element_type=acc)
+    xe = _constrain(xe, shard_ctx, "moe_xe")
+
+    h = jnp.einsum("gecd,edf->gecf", xe, p["we_gate"],
+                   preferred_element_type=acc)
+    h = _constrain(h, shard_ctx, "moe_he")
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, p["we_up"],
+                                    preferred_element_type=acc)
+    h = _constrain(h, shard_ctx, "moe_he")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we_down"],
+                    preferred_element_type=acc)
+    if YE_CONSTRAINT:
+        ye = _constrain(ye, shard_ctx, "moe_xe")
+
+    yg = jnp.einsum("gsec,gecd->gsd", comb, ye,      # [G, gs, d]
+                    preferred_element_type=acc)
+    yg = _constrain(yg, shard_ctx, "moe_tok")
+    y = yg.reshape(b, s, k, d).sum(2)
+    # re-shard to the residual layout HERE — letting the partitioner resolve
+    # the (batch-sharded) → (seq-sharded) mismatch at the `h + fx` add makes
+    # it re-partition the whole dispatch chain with full all-gathers
+    y = _constrain(y, shard_ctx, "residual")
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean((0, 1))
+    ce = jnp.mean(onehot_e, (0, 1))
+    aux = e * jnp.sum(me * ce)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel-mix
+# ---------------------------------------------------------------------------
+
+def rwkv_cm_init(key, d_model: int, d_ff: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"mu_k": jnp.zeros((d_model,)) + 0.5,
+            "mu_r": jnp.zeros((d_model,)) + 0.5,
+            "w_k": normal_init(ks[0], (d_model, d_ff), std=d_model ** -0.5),
+            "w_v": normal_init(ks[1], (d_ff, d_model), std=d_ff ** -0.5),
+            "w_r": normal_init(ks[2], (d_model, d_model),
+                               std=d_model ** -0.5)}
+
+
+def rwkv_cm_apply(p, x, x_prev):
+    """x [B,S,d]; x_prev [B,1,d] = last token of the previous segment."""
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xk = x + (shifted - x) * p["mu_k"]
+    xr = x + (shifted - x) * p["mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (kk @ p["w_v"]), x[:, -1:]

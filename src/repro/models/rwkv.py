@@ -1,0 +1,136 @@
+"""RWKV-6 "Finch" time-mix — data-dependent per-channel decay (rwkv6-7b).
+
+Recurrence per head (K = V = head dim):
+    y_t = r_t · (S_{t−1} + diag(u)·k_tᵀ v_t)
+    S_t = diag(w_t) · S_{t−1} + k_tᵀ v_t
+with data-dependent decay w_t = exp(−exp(w0 + lora(x̃_t))) (Finch), learned
+bonus u, and token-shift mixing on every projection input.
+
+Chunked evaluation: the within-chunk attention factorizes as
+(r·exp(cw)) @ (k·exp(−cw))ᵀ with exponents re-centered per chunk; cross-
+chunk state is a ``lax.scan``. All cross-chunk exponents are ≤ 0; the
+re-centered intra-chunk factors are bounded by exp(chunk·|log w|/2) —
+chunks default to 32 (DESIGN.md notes this in place of RWKV's segmented
+CUDA kernel). Decode is the exact single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nnlib.core import normal_init, rmsnorm_init, rmsnorm_apply
+
+RWKV_CHUNK = 32
+LORA_DIM = 64
+
+
+def rwkv6_init(key, cfg) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    heads = d // cfg.rwkv_head_dim
+    return {
+        "mu": 0.5 * jnp.ones((5, d)),                    # r,k,v,g,w mixes
+        "w_r": normal_init(ks[0], (d, d), std=d ** -0.5),
+        "w_k": normal_init(ks[1], (d, d), std=d ** -0.5),
+        "w_v": normal_init(ks[2], (d, d), std=d ** -0.5),
+        "w_g": normal_init(ks[3], (d, d), std=d ** -0.5),
+        "w_o": normal_init(ks[4], (d, d), std=d ** -0.5),
+        "w0": jnp.full((d,), -2.0),                      # decay base
+        "w_lora_a": normal_init(ks[5], (d, LORA_DIM), std=d ** -0.5),
+        "w_lora_b": normal_init(ks[6], (LORA_DIM, d), std=LORA_DIM ** -0.5),
+        "u": normal_init(ks[7], (d,), std=0.3),          # bonus
+        "ln_x": rmsnorm_init(d),
+    }
+
+
+def _mix(x, shifted, mu):
+    return x + (shifted - x) * mu
+
+
+def _projections(cfg, p, x, shifted):
+    """Returns r,k,v,g [B,S,H,K] and log-decay lw [B,S,H,K] ≤ 0."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    r = _mix(x, shifted, p["mu"][0]) @ p["w_r"]
+    k = _mix(x, shifted, p["mu"][1]) @ p["w_k"]
+    v = _mix(x, shifted, p["mu"][2]) @ p["w_v"]
+    g = _mix(x, shifted, p["mu"][3]) @ p["w_g"]
+    xw = _mix(x, shifted, p["mu"][4])
+    lw = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"])
+    shape = (b, s, h, hd)
+    return (r.reshape(shape), k.reshape(shape), v.reshape(shape),
+            g.reshape(b, s, d), lw.reshape(shape))
+
+
+def rwkv6_apply(cfg, p, x, cache=None):
+    """x [B,S,d]. cache None → chunked (no cache out); dict → decode step."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    if cache is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        r, k, v, g, lw = _projections(cfg, p, x, shifted)
+        u = p["u"].reshape(h, hd)
+        y = _wkv_chunked(r, k, v, lw, u)
+        new_cache = None
+    else:
+        shifted = cache["x_prev"]
+        r, k, v, g, lw = _projections(cfg, p, x, shifted)
+        u = p["u"].reshape(h, hd)
+        r1, k1, v1, lw1 = (t[:, 0] for t in (r, k, v, lw))
+        kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        y = jnp.einsum("bhk,bhkv->bhv", r1,
+                       cache["state"] + u[None, :, :, None] * kv)
+        state = cache["state"] * jnp.exp(lw1)[..., None] + kv
+        y = y[:, None]
+        new_cache = {"state": state.astype(cache["state"].dtype),
+                     "x_prev": x.astype(cache["x_prev"].dtype)}
+    y = rmsnorm_apply(p["ln_x"], y.reshape(b, -1, d), cfg.norm_eps)
+    y = y * jax.nn.silu(g)
+    return y @ p["w_o"], new_cache
+
+
+def _wkv_chunked(r, k, v, lw, u):
+    """r/k/v/lw [B,S,H,K], u [H,K] → y [B,S,H,K(V)]."""
+    b, s, h, kd = r.shape
+    l = min(RWKV_CHUNK, s)
+    while s % l:
+        l //= 2
+    nc = s // l
+    rc, kc, vc, lwc = (t.reshape(b, nc, l, h, kd) for t in (r, k, v, lw))
+    cw = jnp.cumsum(lwc, axis=2)                     # [B,nc,L,H,K]
+    cref = cw[:, :, l // 2:l // 2 + 1]               # re-center
+    # intra-chunk: y_i = Σ_{j<i} r_i exp(cw_{i−1}−cw_j) k_j v_j + u·r_i k_i v_i
+    cw_im1 = jnp.pad(cw, ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))[:, :, :-1]
+    a = rc * jnp.exp(cw_im1 - cref)
+    bfac = kc * jnp.exp(cref - cw)
+    att = jnp.einsum("bclhk,bcmhk->bchlm", a, bfac)  # score l→m
+    mask = jnp.tril(jnp.ones((l, l), bool), -1)      # strict j < i
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    y = jnp.einsum("bchlm,bcmhv->bclhv", att, vc)
+    diag = jnp.einsum("bclhk,hk,bclhk->bclh", rc, u, kc)
+    y = y + diag[..., None] * vc
+    # cross-chunk state
+    dec_end = jnp.exp(cw[:, :, -1:] - cw)            # ≤ 1
+    inc = jnp.einsum("bclhk,bclhv->bchkv", kc * dec_end, vc)
+    tot = jnp.exp(cw[:, :, -1])                      # [B,nc,H,K]
+
+    def scan_fn(state, xs):
+        inc_c, tot_c = xs
+        return state * tot_c[..., None] + inc_c, state
+
+    init = jnp.zeros((b, h, kd, kd), r.dtype)
+    _, states = jax.lax.scan(scan_fn, init,
+                             (inc.swapaxes(0, 1), tot.swapaxes(0, 1)))
+    states = states.swapaxes(0, 1)                   # state at chunk start
+    pref = rc * jnp.exp(cw_im1)                      # decay to chunk start
+    y = y + jnp.einsum("bclhk,bchkv->bclhv", pref, states)
+    return y.reshape(b, s, h, kd)
+
+
+def rwkv6_cache_init(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    return {"state": jnp.zeros((batch, d // hd, hd, hd), dtype),
+            "x_prev": jnp.zeros((batch, 1, d), dtype)}

@@ -1,0 +1,154 @@
+"""Mamba2 (SSD) mixer — chunked matmul form (zamba2 backbone).
+
+State-space recurrence with scalar-per-head decay:
+    h_t = a_t · h_{t−1} + (Δ_t x_t) ⊗ B_t,   y_t = h_t C_t + D x_t
+with a_t = exp(Δ_t · A), A = −exp(A_log) < 0.
+
+TPU-native chunked evaluation (the SSD algorithm): within a chunk of length
+L everything is dense matmuls against the decay matrix
+``exp(ca_i − ca_j)`` (MXU work); across chunks a ``lax.scan`` carries the
+[H, P, N] state. All decay exponents are ≤ 0, so the chunked form is
+numerically safe. Decode is the single-step recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nnlib.core import normal_init, rmsnorm_init, rmsnorm_apply
+
+
+def mamba2_init(key, cfg) -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    heads = din // cfg.ssm_headdim
+    ks = jax.random.split(key, 4)
+    conv_dim = din + 2 * n
+    return {
+        "w_in": normal_init(ks[0], (d, 2 * din + 2 * n + heads),
+                            std=d ** -0.5),
+        "conv_w": normal_init(ks[1], (cfg.ssm_conv, conv_dim), std=0.5),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 8.0, heads)),
+        "dt_bias": jnp.zeros((heads,)),
+        "d_skip": jnp.ones((heads,)),
+        "out_norm": rmsnorm_init(din),
+        "w_out": normal_init(ks[3], (din, d), std=din ** -0.5),
+    }
+
+
+def _split_in(cfg, zxbcdt):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    heads = din // cfg.ssm_headdim
+    z = zxbcdt[..., :din]
+    xc = zxbcdt[..., din:2 * din]
+    bc = zxbcdt[..., 2 * din:2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n:]
+    return z, xc, bc, dt, din, n, heads
+
+
+def _conv_step(p, window):
+    """window [B, K, C] — causal depthwise conv at one position."""
+    return jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+
+
+def mamba2_apply(cfg, p, x, cache=None):
+    """x [B,S,d]. cache None → chunked scan (train/prefill, returns no cache);
+    cache dict → single-step decode. Returns (y, new_cache)."""
+    b, s, d = x.shape
+    zxbcdt = x @ p["w_in"]
+    z, xc, bc, dt, din, n, heads = _split_in(cfg, zxbcdt)
+    ph = cfg.ssm_headdim
+    conv_in = jnp.concatenate([xc, bc], -1)          # [B,S,din+2n]
+
+    if cache is None:
+        k = cfg.ssm_conv
+        padded = jnp.pad(conv_in, ((0, 0), (k - 1, 0), (0, 0)))
+        stacked = jnp.stack([padded[:, i:i + s] for i in range(k)], 2)
+        conv = jax.nn.silu(jnp.einsum("bskc,kc->bsc", stacked, p["conv_w"])
+                           + p["conv_b"])
+        xh = conv[..., :din].reshape(b, s, heads, ph)
+        bmat = conv[..., din:din + n]                # [B,S,N] (1 group)
+        cmat = conv[..., din + n:]
+        dtv = jax.nn.softplus(dt + p["dt_bias"])     # [B,S,H]
+        a = -jnp.exp(p["a_log"])                     # [H] < 0
+        loga = dtv * a                               # [B,S,H] ≤ 0
+        y = _ssd_chunked(cfg, xh * dtv[..., None], bmat, cmat, loga)
+        y = y + xh * p["d_skip"][None, None, :, None]
+        new_cache = None
+    else:
+        # decode: s == 1
+        window = jnp.concatenate([cache["conv"], conv_in], axis=1)[:, 1:]
+        conv = jax.nn.silu(_conv_step(p, window))
+        xh = conv[..., :din].reshape(b, heads, ph)
+        bmat = conv[..., din:din + n]
+        cmat = conv[..., din + n:]
+        dtv = jax.nn.softplus(dt[:, 0] + p["dt_bias"])  # [B,H]
+        a = -jnp.exp(p["a_log"])
+        decay = jnp.exp(dtv * a)                     # [B,H]
+        upd = jnp.einsum("bhp,bn->bhpn", xh * dtv[..., None], bmat)
+        state = cache["state"] * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, cmat)
+        y = (y + xh * p["d_skip"][None, :, None])[:, None]
+        new_cache = {"conv": window, "state": state}
+
+    y = y.reshape(b, -1, din)
+    y = rmsnorm_apply(p["out_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["w_out"], new_cache
+
+
+def _ssd_chunked(cfg, xdt, bmat, cmat, loga):
+    """xdt [B,S,H,P] (already Δ-scaled), b/c [B,S,N], loga [B,S,H] ≤ 0."""
+    b, s, h, ph = xdt.shape
+    n = bmat.shape[-1]
+    l = min(cfg.ssm_chunk, s)
+    while s % l:
+        l //= 2
+    nc = s // l
+    xc = xdt.reshape(b, nc, l, h, ph)
+    bc = bmat.reshape(b, nc, l, n)
+    cc = cmat.reshape(b, nc, l, n)
+    la = loga.reshape(b, nc, l, h)
+    ca = jnp.cumsum(la, axis=2)                      # [B,nc,L,H]
+
+    # intra-chunk: y_i = Σ_{j≤i} exp(ca_i − ca_j)·(C_i·B_j)·xdt_j
+    # mask BEFORE the exp: the upper triangle has ca_i − ca_j > 0 and
+    # overflows to inf, which turns into NaN grads through jnp.where
+    g = jnp.einsum("bcin,bcjn->bcij", cc, bc)        # [B,nc,L,L]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    diff = ca[:, :, :, None, :] - ca[:, :, None, :, :]          # [B,nc,L,L,H]
+    diff = jnp.where(mask[None, None, :, :, None], diff, -1e30)
+    w = g[..., None] * jnp.exp(diff)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+
+    # chunk summaries: state increment + total decay
+    dec_end = jnp.exp(ca[:, :, -1:, :] - ca)         # exp(ca_L − ca_j)
+    inc = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", dec_end, bc, xc)
+    tot = jnp.exp(ca[:, :, -1])                      # [B,nc,H]
+
+    def scan_fn(state, xs):
+        inc_c, tot_c = xs
+        new = state * tot_c[..., None, None] + inc_c
+        return new, state                            # emit state at chunk start
+
+    init = jnp.zeros((b, h, ph, n), xdt.dtype)
+    _, states = jax.lax.scan(scan_fn, init,
+                             (inc.swapaxes(0, 1), tot.swapaxes(0, 1)))
+    states = states.swapaxes(0, 1)                   # [B,nc,H,P,N]
+
+    # inter-chunk: y_i += exp(ca_{i}) · C_i · S_chunkstart
+    pref = jnp.exp(ca)                               # includes step i decay
+    y_inter = jnp.einsum("bcih,bcin,bchpn->bcihp", pref, cc, states)
+    return (y_intra + y_inter).reshape(b, s, h, ph)
+
+
+def mamba2_cache_init(cfg, batch: int, dtype=jnp.float32) -> dict:
+    din = cfg.ssm_expand * cfg.d_model
+    heads = din // cfg.ssm_headdim
+    conv_dim = din + 2 * cfg.ssm_state
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv, conv_dim), dtype),
+            "state": jnp.zeros((batch, heads, cfg.ssm_headdim,
+                                cfg.ssm_state), dtype)}

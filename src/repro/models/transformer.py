@@ -1,0 +1,474 @@
+"""The unified model: embeddings → staged blocks (lax.scan) → head.
+
+Covers all 10 assigned architectures through ModelConfig/LayerSpec:
+dense GQA (qwen3, danube, gemma2), MoE (mixtral, deepseek-MLA), hybrid
+Mamba2+attention (zamba2), attention-free RWKV6, encoder–decoder audio
+(seamless — stub frame embeddings), VLM prefix (internvl — stub patch
+embeddings).
+
+Entry points:
+  init_params(cfg, key)                      → params pytree (fp32 master)
+  forward(cfg, params, batch, shard_ctx)     → logits        (train/prefill)
+  loss_fn / make_train_step                  → CE + AdamW step
+  init_cache(cfg, batch, max_len)            → decode cache pytree
+  decode_step(cfg, params, cache, tok, pos)  → (logits, cache)   serve_step
+
+``shard_ctx`` is an optional dict of NamedShardings used by the dry-run to
+pin the residual-stream layout (sequence-parallel between blocks).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.config import LayerSpec, ModelConfig, Stage
+from repro.nnlib.core import normal_init, rmsnorm_init, rmsnorm_apply
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _constrain(x, shard_ctx, name):
+    if shard_ctx and name in shard_ctx:
+        return jax.lax.with_sharding_constraint(x, shard_ctx[name])
+    return x
+
+
+# ---------------------------------------------------------------------------
+# layer init / apply
+# ---------------------------------------------------------------------------
+
+def layer_init(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": rmsnorm_init(d)}
+    if spec.mixer == "attn":
+        p["attn"] = attn.gqa_init(ks[0], cfg)
+    elif spec.mixer == "mla":
+        p["attn"] = attn.mla_init(ks[0], cfg)
+    elif spec.mixer == "mamba2":
+        p["mamba"] = ssm_mod.mamba2_init(ks[0], cfg)
+    elif spec.mixer == "rwkv6":
+        p["rwkv"] = rwkv_mod.rwkv6_init(ks[0], cfg)
+    if spec.cross_attn:
+        p["cross"] = attn.cross_init(ks[1], cfg)
+        p["norm_cross"] = rmsnorm_init(d)
+    if spec.ffn == "dense":
+        p["norm2"] = rmsnorm_init(d)
+        p["mlp"] = ffn_mod.mlp_init(ks[2], d, cfg.d_ff)
+    elif spec.ffn == "moe":
+        p["norm2"] = rmsnorm_init(d)
+        p["moe"] = ffn_mod.moe_init(ks[2], cfg)
+    elif spec.ffn == "rwkv_cm":
+        p["norm2"] = rmsnorm_init(d)
+        p["cm"] = ffn_mod.rwkv_cm_init(ks[2], d, cfg.d_ff)
+    if spec.post_norm:
+        p["post1"] = rmsnorm_init(d)
+        if spec.ffn != "none":
+            p["post2"] = rmsnorm_init(d)
+    return p
+
+
+def layer_apply(cfg: ModelConfig, spec: LayerSpec, p: dict, h, ctx: dict,
+                cache: dict | None):
+    """Returns (h, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: dict = {}
+    x = rmsnorm_apply(p["norm1"], h, cfg.norm_eps)
+    if spec.mixer in ("attn", "mla"):
+        sub = None if cache is None else cache.get("attn")
+        fn = attn.gqa_apply if spec.mixer == "attn" else attn.mla_apply
+        if spec.mixer == "attn" and not ctx.get("causal", True):
+            # encoder layers: bidirectional full attention
+            mx, _ = _encoder_attention(cfg, p["attn"], x, ctx)
+        else:
+            mx, nc = fn(cfg, spec, p["attn"], x, positions=ctx["positions"],
+                        cache=sub)
+            if nc is not None:
+                new_cache["attn"] = nc
+    elif spec.mixer == "mamba2":
+        sub = None if cache is None else cache.get("mamba")
+        mx, nc = ssm_mod.mamba2_apply(cfg, p["mamba"], x, cache=sub)
+        if nc is not None:
+            new_cache["mamba"] = nc
+    elif spec.mixer == "rwkv6":
+        sub = None if cache is None else cache.get("rwkv")
+        mx, nc = rwkv_mod.rwkv6_apply(cfg, p["rwkv"], x, cache=sub)
+        if nc is not None:
+            new_cache["rwkv"] = nc
+    else:
+        mx = jnp.zeros_like(h)
+    if spec.post_norm:
+        mx = rmsnorm_apply(p["post1"], mx, cfg.norm_eps)
+    h = h + mx.astype(h.dtype)
+    h = _constrain(h, ctx.get("shard_ctx"), "residual")
+
+    if spec.cross_attn:
+        xc = rmsnorm_apply(p["norm_cross"], h, cfg.norm_eps)
+        if cache is not None:
+            enc_kv = cache["cross_kv"]
+            new_cache["cross_kv"] = enc_kv
+        else:
+            enc_kv = attn.cross_kv(cfg, p["cross"], ctx["enc_out"])
+        h = h + attn.cross_apply(cfg, p["cross"], xc, enc_kv).astype(h.dtype)
+
+    if spec.ffn != "none":
+        x2 = rmsnorm_apply(p["norm2"], h, cfg.norm_eps)
+        if spec.ffn == "dense":
+            fx = ffn_mod.mlp_apply(p["mlp"], x2)
+        elif spec.ffn == "moe":
+            fx, aux = ffn_mod.moe_apply(cfg, p["moe"], x2,
+                                        ctx.get("shard_ctx"))
+        else:  # rwkv_cm
+            prev = (cache or {}).get(
+                "cm_prev", jnp.zeros_like(x2[:, :1]))
+            fx, last = ffn_mod.rwkv_cm_apply(p["cm"], x2.astype(prev.dtype)
+                                             if cache is not None else x2,
+                                             prev)
+            if cache is not None:
+                new_cache["cm_prev"] = last.astype(prev.dtype)
+        if spec.post_norm:
+            fx = rmsnorm_apply(p["post2"], fx, cfg.norm_eps)
+        h = h + fx.astype(h.dtype)
+        h = _constrain(h, ctx.get("shard_ctx"), "residual")
+    return h, new_cache, aux
+
+
+def _encoder_attention(cfg, p, x, ctx):
+    b, s, d = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm_apply(p["k_norm"], k, cfg.norm_eps)
+    cos, sin = attn.rope_cos_sin(ctx["positions"], dh, cfg.rope_theta)
+    q = attn.apply_rope(q, cos, sin)
+    k = attn.apply_rope(k, cos, sin)
+    out = attn._chunked_scores_softmax(q, k, v, offset=0, causal=False,
+                                       window=None, softcap=None)
+    return out.reshape(b, s, h * dh) @ p["wo"], None
+
+
+# ---------------------------------------------------------------------------
+# stages (scan over stacked layer params)
+# ---------------------------------------------------------------------------
+
+def _stage_init(cfg, stage: Stage, key) -> tuple:
+    keys = jax.random.split(key, stage.reps * len(stage.unit))
+    out = []
+    for u, spec in enumerate(stage.unit):
+        ks = jnp.stack([keys[r * len(stage.unit) + u]
+                        for r in range(stage.reps)])
+        out.append(jax.vmap(lambda k: layer_init(cfg, spec, k))(ks))
+    return tuple(out)
+
+
+def _run_stages(cfg, stages_cfg, stages_params, h, ctx, caches):
+    """caches: None (no cache) or list per stage (pytrees, leading dim reps).
+
+    Layers run under ``lax.scan`` over the stacked reps by default; the
+    dry-run sets ``ctx['unroll']`` to get exact per-layer FLOP/byte counts
+    out of ``cost_analysis`` (XLA counts a while-loop body once, not
+    ×trip-count). Returns (h, new_caches, aux_total)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    unroll = bool(ctx.get("unroll", False))
+    for si, (stage, sp) in enumerate(zip(stages_cfg, stages_params)):
+        cache_s = None if caches is None else caches[si]
+
+        def body(carry, xs):
+            h, aux = carry
+            unit_params, unit_cache = xs
+            new_unit_cache = []
+            for u, spec in enumerate(stage.unit):
+                uc = None if unit_cache is None else unit_cache[u]
+                h, nc, a = layer_apply(cfg, spec, unit_params[u], h, ctx, uc)
+                new_unit_cache.append(nc)
+                aux = aux + a
+            ys = tuple(new_unit_cache) if unit_cache is not None else None
+            return (h, aux), ys
+
+        body = jax.checkpoint(body)
+        xs = (sp, cache_s)
+        if unroll:
+            carry = (h, aux_total)
+            ys_list = []
+            for r in range(stage.reps):
+                xs_r = jax.tree_util.tree_map(lambda x: x[r], xs)
+                carry, ys_r = body(carry, xs_r)
+                ys_list.append(ys_r)
+            (h, aux_total) = carry
+            ys = (jax.tree_util.tree_map(
+                lambda *leaves: jnp.stack(leaves), *ys_list)
+                if cache_s is not None else None)
+        else:
+            (h, aux_total), ys = jax.lax.scan(body, (h, aux_total), xs)
+        new_caches.append(ys)
+    return h, (new_caches if caches is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# model init / forward
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 6 + len(cfg.stages) +
+                          len(cfg.encoder_stages))
+    d = cfg.d_model
+    v = cfg.padded_vocab
+    params: dict[str, Any] = {
+        "embed": normal_init(ks[0], (v, d), std=0.02),
+        "final_norm": rmsnorm_init(d),
+        "lm_head": normal_init(ks[1], (d, v), std=d ** -0.5),
+        "stages": [_stage_init(cfg, s, ks[6 + i])
+                   for i, s in enumerate(cfg.stages)],
+    }
+    if cfg.num_prefix_tokens and cfg.prefix_dim:
+        params["prefix_proj"] = normal_init(
+            ks[2], (cfg.prefix_dim, d), std=cfg.prefix_dim ** -0.5)
+    if cfg.encoder_stages:
+        base = 6 + len(cfg.stages)
+        params["encoder"] = {
+            "in_proj": normal_init(ks[3], (cfg.prefix_dim or d, d),
+                                   std=d ** -0.5),
+            "stages": [_stage_init(cfg, s, ks[base + i])
+                       for i, s in enumerate(cfg.encoder_stages)],
+            "final_norm": rmsnorm_init(d),
+        }
+    return params
+
+
+def _embed(cfg, params, tokens):
+    h = params["embed"][tokens]
+    if cfg.embed_scale:
+        h = h * jnp.sqrt(jnp.array(cfg.d_model, h.dtype))
+    return h
+
+
+def _encode(cfg, params, frames, shard_ctx, unroll=False):
+    """Audio/enc-dec encoder over stub frame embeddings [B,Se,prefix_dim]."""
+    h = frames @ params["encoder"]["in_proj"]
+    ctx = {"positions": jnp.arange(frames.shape[1]), "causal": False,
+           "shard_ctx": shard_ctx, "unroll": unroll}
+    h, _, _ = _run_stages(cfg, cfg.encoder_stages,
+                          params["encoder"]["stages"], h, ctx, None)
+    return rmsnorm_apply(params["encoder"]["final_norm"], h, cfg.norm_eps)
+
+
+def _cast_params(params, dtype, shard_ctx=None):
+    if dtype is None:
+        return params
+    cast = jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, params)
+    # pin the bf16 copy to the params' sharded layout — otherwise GSPMD is
+    # free to hoist the cast past the FSDP all-gathers and every weight
+    # crosses ICI in f32 (2× bytes; §Perf-1)
+    if shard_ctx and "params_sh" in shard_ctx:
+        cast = jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            cast, shard_ctx["params_sh"])
+    return cast
+
+
+def forward_hidden(cfg: ModelConfig, params, batch: dict, shard_ctx=None,
+                   compute_dtype=None, unroll=False):
+    """Everything up to (and including) the final norm.
+
+    Returns (h [B,S_text,d], aux_loss, cast_params)."""
+    params = _cast_params(params, compute_dtype, shard_ctx)
+    tokens = batch["tokens"]
+    h = _embed(cfg, params, tokens)
+    n_prefix = 0
+    if cfg.num_prefix_tokens and "prefix_emb" in batch:
+        pre = batch["prefix_emb"] @ params["prefix_proj"]
+        h = jnp.concatenate([pre.astype(h.dtype), h], axis=1)
+        n_prefix = pre.shape[1]
+    ctx = {"positions": jnp.arange(h.shape[1]), "causal": True,
+           "shard_ctx": shard_ctx, "unroll": unroll}
+    if cfg.encoder_stages:
+        ctx["enc_out"] = _encode(cfg, params, batch["frames"], shard_ctx,
+                                 unroll)
+    h = _constrain(h, shard_ctx, "residual")
+    h, _, aux = _run_stages(cfg, cfg.stages, params["stages"], h, ctx, None)
+    h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    if n_prefix:
+        h = h[:, n_prefix:]
+    return h, aux, params
+
+
+def _head(cfg, params, h):
+    logits = h @ params["lm_head"]
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(
+            logits / cfg.final_logit_softcap)
+    return logits
+
+
+def forward(cfg: ModelConfig, params, batch: dict, shard_ctx=None,
+            compute_dtype=None, unroll=False):
+    """Training/prefill forward. batch: tokens [B,S] (+ prefix_emb /
+    frames). Returns (logits [B,S,V], aux_loss)."""
+    h, aux, params = forward_hidden(cfg, params, batch, shard_ctx,
+                                    compute_dtype, unroll)
+    return _head(cfg, params, h), aux
+
+
+LOSS_CHUNK = 1024    # sequence chunk for the f32 log-softmax (vocab is big)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict, shard_ctx=None,
+            compute_dtype=None, unroll=False):
+    h, aux, params = forward_hidden(cfg, params, batch, shard_ctx,
+                                    compute_dtype, unroll)
+    targets = batch["targets"]
+    b, s, _ = h.shape
+
+    def ce_of(args):
+        hc, tc = args
+        logits = _head(cfg, params, hc)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.take_along_axis(logp, tc[..., None], axis=-1)[..., 0]
+
+    if s % LOSS_CHUNK == 0 and s > LOSS_CHUNK:
+        nc = s // LOSS_CHUNK
+        hs = h.reshape(b, nc, LOSS_CHUNK, -1).swapaxes(0, 1)
+        ts = targets.reshape(b, nc, LOSS_CHUNK).swapaxes(0, 1)
+        nll = jax.lax.map(ce_of, (hs, ts)).swapaxes(0, 1).reshape(b, s)
+    else:
+        nll = ce_of((h, targets))
+    loss = jnp.mean(nll) + AUX_LOSS_WEIGHT * aux
+    return loss, {"loss": loss, "ce": jnp.mean(nll), "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    shard_ctx=None, compute_dtype=None, unroll=False,
+                    microbatches: int = 1, bf16_grads: bool = True):
+    """One optimizer step. ``microbatches`` > 1 splits the global batch and
+    accumulates fp32 grads sequentially (bounds activation transients —
+    needed for the MoE archs' train shapes on 16 GB/chip).
+
+    ``bf16_grads`` (default, §Perf-1): differentiate w.r.t. the *bf16 cast*
+    of the fp32 master — every backward cotangent (and therefore every
+    cross-device gradient reduction) is bf16; the optimizer still
+    accumulates fp32 moments. False = paper-faithful f32 backward
+    (baseline in EXPERIMENTS.md §Perf)."""
+    opt_cfg = opt_cfg or AdamWConfig(lr=3e-4, weight_decay=0.01)
+
+    def grads_of(params, batch):
+        if bf16_grads and compute_dtype is not None:
+            pb = _cast_params(params, compute_dtype, shard_ctx)
+            return jax.value_and_grad(
+                lambda q: loss_fn(cfg, q, batch, shard_ctx, None, unroll),
+                has_aux=True)(pb)
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, shard_ctx, compute_dtype,
+                              unroll),
+            has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] //
+                                     microbatches) + x.shape[1:]), batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_step(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = grads_of(params, mb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32) / microbatches,
+                    gacc, g)
+                return (gacc, lacc + l / microbatches), None
+
+            if unroll:
+                carry = (zeros, jnp.zeros((), jnp.float32))
+                for m in range(microbatches):
+                    mb = jax.tree_util.tree_map(lambda x: x[m], micro)
+                    carry, _ = acc_step(carry, mb)
+                grads, loss = carry
+            else:
+                (grads, loss), _ = jax.lax.scan(
+                    acc_step, (zeros, jnp.zeros((), jnp.float32)), micro)
+            metrics = {"loss": loss, "ce": loss,
+                       "aux": jnp.zeros((), jnp.float32)}
+        params, opt_state = adamw_update(opt_cfg, grads, opt_state, params)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_opt(params):
+    return adamw_init(params)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init + decode step
+# ---------------------------------------------------------------------------
+
+def _layer_cache_init(cfg, spec, batch, max_len, enc_out=None, dtype=jnp.bfloat16):
+    c: dict[str, Any] = {}
+    if spec.mixer == "attn":
+        c["attn"] = attn.gqa_cache_init(cfg, spec, batch, max_len, dtype)
+    elif spec.mixer == "mla":
+        c["attn"] = attn.mla_cache_init(cfg, spec, batch, max_len, dtype)
+    elif spec.mixer == "mamba2":
+        c["mamba"] = ssm_mod.mamba2_cache_init(cfg, batch, jnp.float32)
+    elif spec.mixer == "rwkv6":
+        c["rwkv"] = rwkv_mod.rwkv6_cache_init(cfg, batch, jnp.float32)
+    if spec.cross_attn:
+        se = cfg.encoder_seq_len or 1
+        kv, dh = cfg.num_kv_heads, cfg.head_dim
+        c["cross_kv"] = {"k": jnp.zeros((batch, se, kv, dh), dtype),
+                         "v": jnp.zeros((batch, se, kv, dh), dtype)}
+    if spec.ffn == "rwkv_cm":
+        c["cm_prev"] = jnp.zeros((batch, 1, cfg.d_model), jnp.float32)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Decode cache pytree: list per stage of tuples per unit position,
+    leaves stacked [reps, ...]."""
+    caches = []
+    for stage in cfg.stages:
+        unit_caches = []
+        for spec in stage.unit:
+            one = _layer_cache_init(cfg, spec, batch, max_len, dtype=dtype)
+            stacked = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (stage.reps,) + x.shape).copy()
+                if stage.reps > 1 else x[None], one)
+            unit_caches.append(stacked)
+        caches.append(tuple(unit_caches))
+    return caches
+
+
+def decode_step(cfg: ModelConfig, params, caches, token, pos,
+                shard_ctx=None, compute_dtype=None, unroll=False):
+    """serve_step: ONE new token [B,1] against the cache; absolute position
+    ``pos`` (scalar int32). Returns (logits [B,1,V], new_caches)."""
+    params = _cast_params(params, compute_dtype)
+    h = _embed(cfg, params, token)
+    ctx = {"positions": jnp.full((1,), pos, jnp.int32), "causal": True,
+           "shard_ctx": shard_ctx, "unroll": unroll}
+    h = _constrain(h, shard_ctx, "decode_residual")
+    h, new_caches, _ = _run_stages(cfg, cfg.stages, params["stages"], h,
+                                   ctx, caches)
+    h = rmsnorm_apply(params["final_norm"], h, cfg.norm_eps)
+    logits = h @ params["lm_head"]
+    if cfg.final_logit_softcap:
+        logits = cfg.final_logit_softcap * jnp.tanh(
+            logits / cfg.final_logit_softcap)
+    return logits, new_caches

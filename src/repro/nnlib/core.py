@@ -1,0 +1,117 @@
+"""Minimal neural-network substrate (no flax in this container).
+
+Params are plain pytrees of jnp arrays; every module is an (init, apply)
+pair. Used by the DRLGO actor/critic networks, the GNN layers, and the
+transformer stack's small components.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of jnp arrays
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def uniform_init(key, shape, scale, dtype=jnp.float32):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def glorot_init(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    scale = math.sqrt(6.0 / (fan_in + fan_out))
+    return uniform_init(key, shape, scale, dtype)
+
+
+def he_init(key, shape, dtype=jnp.float32):
+    fan_in = shape[-2]
+    std = math.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * std
+
+
+# ---------------------------------------------------------------------------
+# dense / mlp
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, *, init=glorot_init,
+               bias: bool = True, dtype=jnp.float32) -> Params:
+    kw, _ = jax.random.split(key)
+    p = {"w": init(kw, (in_dim, out_dim), dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def mlp_init(key, sizes: Sequence[int], *, bias: bool = True,
+             init=glorot_init, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(key, len(sizes) - 1)
+    return [dense_init(k, i, o, init=init, bias=bias, dtype=dtype)
+            for k, i, o in zip(keys, sizes[:-1], sizes[1:])]
+
+
+def mlp_apply(p: Params, x: jnp.ndarray,
+              activation: Callable = jax.nn.relu,
+              final_activation: Callable | None = None) -> jnp.ndarray:
+    for i, layer in enumerate(p):
+        x = dense_apply(layer, x)
+        if i < len(p) - 1:
+            x = activation(x)
+        elif final_activation is not None:
+            x = final_activation(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# pytree utilities
+# ---------------------------------------------------------------------------
+
+def tree_size(tree: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_polyak(new: Params, old: Params, tau: float) -> Params:
+    """Soft update: tau * new + (1 - tau) * old  (paper Eqs. 31-32)."""
+    return jax.tree_util.tree_map(lambda n, o: tau * n + (1 - tau) * o, new, old)

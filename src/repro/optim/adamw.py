@@ -1,0 +1,95 @@
+"""AdamW + schedules, self-contained (no optax in this container).
+
+The optimizer state is a pytree mirroring the params, so it inherits any
+sharding we assign to params (ZeRO falls out of FSDP param sharding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray          # scalar int32
+    mu: Params                 # first moment  (f32)
+    nu: Params                 # second moment (f32)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float | None = 1.0
+
+
+def adamw_init(params: Params) -> AdamState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                     nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Params, state: AdamState,
+                 params: Params) -> tuple[Params, AdamState]:
+    step = state.step + 1
+    if cfg.grad_clip is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    lr = cfg.lr(step) if callable(cfg.lr) else cfg.lr
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    newp = treedef.unflatten([o[0] for o in out])
+    newm = treedef.unflatten([o[1] for o in out])
+    newv = treedef.unflatten([o[2] for o in out])
+    return newp, AdamState(step=step, mu=newm, nu=newv)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return sched
+
+
+def constant_schedule(base_lr: float) -> Callable:
+    return lambda step: jnp.full((), base_lr, jnp.float32)

@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 CPU device;
+multi-device tests spawn subprocesses with their own flags."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_edges(rng, n, e):
+    have = set()
+    max_e = n * (n - 1) // 2
+    e = min(e, max_e)
+    while len(have) < e:
+        i, j = int(rng.integers(n)), int(rng.integers(n))
+        if i != j:
+            have.add((min(i, j), max(i, j)))
+    return np.array(sorted(have), np.int64).reshape(-1, 2)

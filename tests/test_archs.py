@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (assignment requirement): every assigned
+arch instantiates a REDUCED variant (≤2 layers, d_model ≤ 512, ≤4 experts)
+and runs one forward + one train step on CPU — shapes + no NaNs — plus
+decode == teacher-forced forward equivalence for one arch per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_config, list_archs
+from repro.models import transformer as T
+from repro.models.config import reduced
+from repro.optim.adamw import AdamWConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, b=2, s=32):
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    if cfg.num_prefix_tokens and cfg.prefix_dim:
+        batch["prefix_emb"] = 0.02 * jax.random.normal(
+            KEY, (b, cfg.num_prefix_tokens, cfg.prefix_dim))
+    if cfg.encoder_stages:
+        batch["frames"] = 0.02 * jax.random.normal(
+            KEY, (b, cfg.encoder_seq_len, cfg.prefix_dim))
+    return batch
+
+
+def test_registry_complete():
+    assert len(list_archs()) == 10
+    types = {get_config(a).arch_type for a in ARCHS}
+    assert types == {"dense", "moe", "hybrid", "ssm", "vlm", "audio"}
+
+
+def test_full_configs_match_assignment():
+    cfg = get_config("gemma2-9b")
+    assert cfg.num_layers == 42 and cfg.d_model == 3584
+    assert cfg.attn_logit_softcap == 50.0
+    cfg = get_config("deepseek-v2-lite-16b")
+    assert cfg.kv_lora_rank == 512 and cfg.num_experts == 64
+    assert cfg.num_experts_per_tok == 6
+    cfg = get_config("zamba2-2.7b")
+    assert cfg.num_layers == 54 and cfg.ssm_state == 64
+    cfg = get_config("mixtral-8x7b")
+    assert cfg.num_experts == 8 and cfg.num_experts_per_tok == 2
+    cfg = get_config("rwkv6-7b")
+    assert cfg.d_model == 4096 and cfg.vocab_size == 65536
+    cfg = get_config("internvl2-26b")
+    assert cfg.num_heads == 48 and cfg.d_ff == 16384
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_smoke_forward_and_train(arch):
+    cfg = reduced(get_config(arch))
+    assert cfg.d_model <= 512 and cfg.num_layers <= 2
+    assert cfg.num_experts <= 4
+    params = T.init_params(cfg, KEY)
+    batch = make_batch(cfg)
+    logits, aux = T.forward(cfg, params, batch)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+    step = jax.jit(T.make_train_step(cfg, AdamWConfig(lr=1e-3)))
+    params2, opt2, m = step(params, T.init_opt(params), batch)
+    assert np.isfinite(float(m["loss"]))
+    delta = jax.tree_util.tree_reduce(
+        lambda a, x: a + float(jnp.abs(x).sum()),
+        jax.tree_util.tree_map(lambda a, b: jnp.mean(a - b),
+                               params, params2), 0.0)
+    assert delta != 0.0                      # the step actually trained
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "deepseek-v2-lite-16b",
+                                  "zamba2-2.7b", "rwkv6-7b",
+                                  "mixtral-8x7b", "gemma2-9b"])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = reduced(get_config(arch))
+    params = T.init_params(cfg, KEY)
+    b, s = 2, 10
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    logits_tf, _ = T.forward(cfg, params, {"tokens": toks, "targets": toks})
+    cache = T.init_cache(cfg, b, max_len=s, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, cache = T.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                  jnp.int32(t))
+        outs.append(lg)
+    err = float(jnp.max(jnp.abs(logits_tf - jnp.concatenate(outs, 1))))
+    assert err < 1e-3, err
+
+
+def test_sliding_window_decode_ring_buffer():
+    """A windowed arch decodes correctly past the window boundary."""
+    import dataclasses
+    cfg = reduced(get_config("h2o-danube-1.8b"))
+    spec = cfg.stages[0].unit[0]
+    window = 4
+    cfg = dataclasses.replace(
+        cfg, stages=(dataclasses.replace(
+            cfg.stages[0],
+            unit=(dataclasses.replace(spec, window=window),)),))
+    params = T.init_params(cfg, KEY)
+    b, s = 1, 12
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    logits_tf, _ = T.forward(cfg, params, {"tokens": toks, "targets": toks})
+    cache = T.init_cache(cfg, b, max_len=s, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, cache = T.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                  jnp.int32(t))
+        outs.append(lg)
+    err = float(jnp.max(jnp.abs(logits_tf - jnp.concatenate(outs, 1))))
+    assert err < 1e-3, err
+
+
+def test_param_counts_close_to_reference():
+    """Sanity: full-config param counts are in the right ballpark."""
+    expected = {"mixtral-8x7b": 46.7e9, "deepseek-v2-lite-16b": 15.7e9,
+                "gemma2-9b": 10.2e9, "h2o-danube-1.8b": 1.8e9}
+    for arch, n in expected.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < 0.15, (arch, got)

@@ -1,0 +1,83 @@
+"""Dynamic graph model (§3.2): mask module + position attribute semantics."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dynamic_graph import (GraphState, add_users,
+                                      make_graph_state, move_users,
+                                      perturb_scenario, random_scenario,
+                                      remove_users, rewire)
+
+
+def test_make_graph_state_masks_and_pads():
+    st = make_graph_state(8, [[0, 0], [1, 1], [2, 2]], [(0, 1), (1, 2)],
+                          [10, 20, 30])
+    assert float(st.num_active()) == 3
+    assert st.adj.shape == (8, 8)
+    assert float(st.adj[0, 1]) == 1.0 and float(st.adj[1, 0]) == 1.0
+    assert float(st.task_kb[3]) == 0.0           # padded slot empty
+
+
+def test_remove_users_drops_edges():
+    st = make_graph_state(4, np.zeros((4, 2)), [(0, 1), (1, 2), (2, 3)],
+                          [1, 1, 1, 1])
+    st2 = remove_users(st, jnp.asarray([0.0, 1.0, 0.0, 0.0]))
+    assert float(st2.num_active()) == 3
+    assert float(st2.adj[0, 1]) == 0.0 and float(st2.adj[1, 2]) == 0.0
+    assert float(st2.adj[2, 3]) == 1.0           # untouched edge survives
+
+
+def test_add_users_reuses_masked_slots():
+    st = make_graph_state(4, np.zeros((3, 2)), [(0, 1)], [1, 1, 1], active=3)
+    st = remove_users(st, jnp.asarray([0.0, 1.0, 0.0, 0.0]))
+    adj_new = np.zeros((4, 4), np.float32)
+    adj_new[1, 2] = adj_new[2, 1] = 1.0
+    st2 = add_users(st, jnp.asarray([0.0, 1.0, 0.0, 0.0]),
+                    jnp.asarray(np.full((4, 2), 7.0, np.float32)),
+                    jnp.asarray(np.full(4, 42.0, np.float32)),
+                    jnp.asarray(adj_new))
+    assert float(st2.num_active()) == 3
+    assert float(st2.task_kb[1]) == 42.0
+    assert float(st2.pos[1, 0]) == 7.0
+    assert float(st2.adj[1, 2]) == 1.0
+
+
+def test_add_cannot_clobber_active_slot():
+    st = make_graph_state(3, np.zeros((3, 2)), [], [1, 2, 3])
+    st2 = add_users(st, jnp.ones(3), jnp.asarray(np.full((3, 2), 9.0,
+                                                         np.float32)),
+                    jnp.asarray(np.full(3, 99.0, np.float32)),
+                    st.adj)
+    np.testing.assert_allclose(np.asarray(st2.task_kb),
+                               np.asarray(st.task_kb))
+
+
+def test_move_users_only_moves_active():
+    st = make_graph_state(3, np.zeros((2, 2)), [], [1, 1], active=2)
+    newp = jnp.asarray(np.full((3, 2), 5.0, np.float32))
+    st2 = move_users(st, newp)
+    assert float(st2.pos[0, 0]) == 5.0
+    assert float(st2.pos[2, 0]) == 0.0           # masked slot unchanged
+
+
+def test_rewire_symmetrizes_and_masks():
+    st = make_graph_state(4, np.zeros((3, 2)), [], [1, 1, 1], active=3)
+    adj = np.zeros((4, 4), np.float32)
+    adj[0, 1] = 1.0           # one-directional input
+    adj[2, 3] = 1.0           # touches masked vertex 3
+    st2 = rewire(st, jnp.asarray(adj))
+    assert float(st2.adj[1, 0]) == 1.0
+    assert float(st2.adj[2, 3]) == 0.0
+    assert float(jnp.diagonal(st2.adj).sum()) == 0.0
+
+
+def test_perturb_keeps_invariants(rng):
+    st = random_scenario(rng, 24, 18, 40)
+    for _ in range(5):
+        st = perturb_scenario(rng, st, 0.3)
+        adj = np.asarray(st.adj)
+        mask = np.asarray(st.mask)
+        np.testing.assert_allclose(adj, adj.T)
+        assert np.all(np.diagonal(adj) == 0)
+        # no edges incident to masked vertices
+        assert np.all(adj[mask == 0] == 0)
+        assert np.all(adj[:, mask == 0] == 0)

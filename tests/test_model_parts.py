@@ -1,0 +1,195 @@
+"""Model-component unit tests: RoPE, attention masking variants, MoE
+routing invariants, Mamba2/RWKV6 decode-vs-chunked equivalence at the
+module level, sharding-rule sanity."""
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import rwkv as R
+from repro.models import ssm as S
+from repro.models.config import LayerSpec, ModelConfig, Stage, reduced
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_rope_rotation_properties():
+    """RoPE preserves norm and makes q·k depend only on relative offset."""
+    dh = 32
+    q = jax.random.normal(KEY, (1, 1, 1, dh))
+    for pos in (0, 5, 100):
+        cos, sin = A.rope_cos_sin(jnp.asarray([pos]), dh, 10000.0)
+        q_r = A.apply_rope(q, cos, sin)
+        np.testing.assert_allclose(float(jnp.linalg.norm(q_r)),
+                                   float(jnp.linalg.norm(q)), rtol=1e-5)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, dh))
+
+    def dot_at(pq, pk):
+        cq = A.rope_cos_sin(jnp.asarray([pq]), dh, 10000.0)
+        ck = A.rope_cos_sin(jnp.asarray([pk]), dh, 10000.0)
+        return float(jnp.sum(A.apply_rope(q, *cq) * A.apply_rope(k, *ck)))
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(13, 11), rtol=1e-4)
+
+
+def test_sliding_window_masks_old_keys():
+    b, h, s, dh = 1, 1, 16, 8
+    q = jax.random.normal(KEY, (b, s, h, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, h, dh))
+    v = jnp.eye(s)[None, :, None, :].astype(jnp.float32) * 1.0
+    v = jnp.broadcast_to(v, (b, s, h, s)).reshape(b, s, h, s)
+    out = A._chunked_scores_softmax(q, k, v, offset=0, causal=True,
+                                    window=4, softcap=None)
+    # output at position 15 must have zero weight on keys ≤ 11
+    w = np.asarray(out[0, 15, 0])       # v one-hot ⇒ out = attention weights
+    assert w[:12].max() < 1e-6
+    assert w[12:16].sum() > 0.999
+
+
+def test_softcap_bounds_scores():
+    s = jnp.linspace(-300, 300, 101)
+    capped = 50.0 * jnp.tanh(s / 50.0)
+    assert float(jnp.max(jnp.abs(capped))) <= 50.0
+
+
+def test_moe_fully_routes_small_batches():
+    cfg = reduced(get_config("mixtral-8x7b"))
+    p = F.moe_init(jax.random.PRNGKey(2), cfg)
+    x = 0.1 * jax.random.normal(KEY, (2, 8, cfg.d_model))
+    y, aux = F.moe_apply(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux))
+    # zero input → zero expert output (+ shared expert of zero is zero)
+    y0, _ = F.moe_apply(cfg, p, jnp.zeros_like(x))
+    np.testing.assert_allclose(np.asarray(y0), 0.0, atol=1e-6)
+
+
+def test_moe_aux_loss_balanced_is_one():
+    """Perfectly uniform routing gives aux ≈ 1 (Switch normalization)."""
+    cfg = reduced(get_config("mixtral-8x7b"))
+    e = cfg.num_experts
+    probs = jnp.full((1024, e), 1.0 / e)
+    me = probs.mean(0)
+    ce = jnp.full((e,), 1.0 / e)
+    aux = e * jnp.sum(me * ce)
+    np.testing.assert_allclose(float(aux), 1.0, rtol=1e-6)
+
+
+def test_mamba2_decode_matches_chunked():
+    cfg = reduced(get_config("zamba2-2.7b"))
+    p = S.mamba2_init(jax.random.PRNGKey(3), cfg)
+    b, s = 2, 12
+    x = 0.1 * jax.random.normal(KEY, (b, s, cfg.d_model))
+    full, _ = S.mamba2_apply(cfg, p, x, cache=None)
+    cache = S.mamba2_cache_init(cfg, b)
+    outs = []
+    for t in range(s):
+        o, cache = S.mamba2_apply(cfg, p, x[:, t:t + 1], cache=cache)
+        outs.append(o)
+    err = float(jnp.max(jnp.abs(full - jnp.concatenate(outs, 1))))
+    assert err < 1e-4, err
+
+
+def test_rwkv6_decode_matches_chunked():
+    cfg = reduced(get_config("rwkv6-7b"))
+    p = R.rwkv6_init(jax.random.PRNGKey(4), cfg)
+    b, s = 2, 12
+    x = 0.1 * jax.random.normal(KEY, (b, s, cfg.d_model))
+    full, _ = R.rwkv6_apply(cfg, p, x, cache=None)
+    cache = R.rwkv6_cache_init(cfg, b)
+    outs = []
+    for t in range(s):
+        o, cache = R.rwkv6_apply(cfg, p, x[:, t:t + 1], cache=cache)
+        outs.append(o)
+    err = float(jnp.max(jnp.abs(full - jnp.concatenate(outs, 1))))
+    assert err < 1e-4, err
+
+
+def test_gqa_cache_window_sizing():
+    cfg = reduced(get_config("h2o-danube-1.8b"))
+    spec = LayerSpec(mixer="attn", window=4096)
+    c = A.gqa_cache_init(cfg, spec, batch=2, max_len=32768)
+    assert c["k"].shape[1] == 4096            # ring buffer = window
+    spec_full = LayerSpec(mixer="attn", window=None)
+    c = A.gqa_cache_init(cfg, spec_full, batch=2, max_len=32768)
+    assert c["k"].shape[1] == 32768
+
+
+def test_mla_cache_is_compressed():
+    cfg = get_config("deepseek-v2-lite-16b")
+    spec = cfg.stages[0].unit[0]
+    c = A.mla_cache_init(cfg, spec, batch=1, max_len=1024)
+    per_tok = c["c_kv"].shape[-1] + c["k_rope"].shape[-1]
+    full = cfg.num_heads * cfg.head_dim * 2   # uncompressed k+v
+    assert per_tok == 512 + 64
+    assert per_tok < full / 5                 # >5× cache compression
+
+
+def test_sharding_rules_divisible():
+    """Every full config's param tree gets mesh-divisible specs on a fake
+    16×16 mesh (the production single-pod shape)."""
+    from repro.launch import shardings as SH
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    mesh = FakeMesh()
+    from repro.configs.registry import ARCHS
+    from repro.models import transformer as T
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        sds = jax.eval_shape(lambda c=cfg: T.init_params(
+            c, jax.random.PRNGKey(0)))
+        flat, _ = jax.tree_util.tree_flatten_with_path(sds)
+        for path, leaf in flat:
+            spec = SH._spec_for_leaf(path, leaf.shape, mesh)
+            for dim, axis in zip(leaf.shape, spec):
+                if axis is None:
+                    continue
+                size = 1
+                for a in (axis if isinstance(axis, tuple) else (axis,)):
+                    size *= mesh.shape[a]
+                assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+
+def test_int8_kv_decode_close_to_forward():
+    """§Perf-3: the int8 KV cache decodes within quantization noise."""
+    from repro.models import transformer as T
+    cfg = reduced(get_config("qwen3-0.6b"))
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    b, s = 2, 10
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    tf, _ = T.forward(cfg, params, {"tokens": toks, "targets": toks})
+    cache = T.init_cache(cfg, b, max_len=s, dtype=jnp.int8)
+    outs = []
+    for t in range(s):
+        lg, cache = T.decode_step(cfg, params, cache, toks[:, t:t + 1],
+                                  jnp.int32(t))
+        outs.append(lg)
+    rel = float(jnp.max(jnp.abs(tf - jnp.concatenate(outs, 1))) /
+                jnp.max(jnp.abs(tf)))
+    assert rel < 0.05, rel
+
+
+def test_moe_identical_experts_equal_single_expert():
+    """Routing invariant: if every expert has identical weights, the MoE
+    output equals that expert's MLP regardless of the routing decisions
+    (gates are renormalized to sum to 1)."""
+    cfg = reduced(get_config("mixtral-8x7b"))
+    cfg = dataclasses.replace(cfg, num_shared_experts=0)
+    p = F.moe_init(jax.random.PRNGKey(5), cfg)
+    p = dict(p)
+    p.pop("shared", None)
+    for name in ("we_gate", "we_up", "we_down"):
+        first = p[name][0]
+        p[name] = jnp.broadcast_to(first, p[name].shape)
+    x = 0.1 * jax.random.normal(KEY, (2, 8, cfg.d_model))
+    y, _ = F.moe_apply(cfg, p, x)
+    dense = {"w_gate": p["we_gate"][0], "w_up": p["we_up"][0],
+             "w_down": p["we_down"][0]}
+    expect = F.mlp_apply(dense, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect),
+                               rtol=2e-3, atol=2e-4)
