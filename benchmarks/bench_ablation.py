@@ -1,37 +1,50 @@
 """Paper Fig. 12 (ablation): DRLGO vs DRL-only (no HiCut, no subgraph
-reward) — system cost and cross-server bytes across time steps."""
+reward) — system cost and cross-server bytes across time steps.
+
+Both arms are :class:`repro.core.api.GraphEdgeController` instances that
+differ only in the partitioner registry name: the full system uses
+``partitioner`` (HiCut by default), the ablation uses ``"none"`` (every
+vertex its own subgraph, subgraph reward off)."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core.api import GraphEdgeController
 from repro.core.dynamic_graph import perturb_scenario
 from repro.core.offload.drlgo import DRLGOTrainer, DRLGOTrainerConfig
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, partitioner: str = "hicut_ref") -> None:
     episodes = 30 if quick else 300
     n_users = 24 if quick else 300
     base = dict(capacity=n_users + 8, n_users=n_users, n_assoc=3 * n_users,
                 episodes=episodes, warmup_steps=256, cost_scale=1.0)
-    full = DRLGOTrainer(DRLGOTrainerConfig(**base, use_hicut=True))
-    ablated = DRLGOTrainer(DRLGOTrainerConfig(**base, use_hicut=False))
+    full = DRLGOTrainer(DRLGOTrainerConfig(**base, partitioner=partitioner))
+    ablated = DRLGOTrainer(DRLGOTrainerConfig(**base, partitioner="none"))
     full.train()
     ablated.train()
+
+    arms = {}
+    for tag, tr in (("drlgo", full), ("drl_only", ablated)):
+        arms[tag] = GraphEdgeController(
+            net=tr.net, policy=tr.as_policy(),
+            partitioner=tr.cfg.partitioner_name,
+            cost_scale=tr.cfg.cost_scale, zeta_sp=tr.cfg.zeta_sp)
 
     rng = np.random.default_rng(3)
     sc = full.scenario
     costs_full, costs_abl, bits_full, bits_abl = [], [], [], []
     for t in range(3 if quick else 10):
         sc = perturb_scenario(rng, sc, 0.2)
-        f = full.evaluate(sc)
-        a = ablated.evaluate(sc)
-        costs_full.append(f["system_cost"])
-        costs_abl.append(a["system_cost"])
-        bits_full.append(f["cross_bits"])
-        bits_abl.append(a["cross_bits"])
+        f = arms["drlgo"].step(sc)
+        a = arms["drl_only"].step(sc)
+        costs_full.append(float(f.cost.c))
+        costs_abl.append(float(a.cost.c))
+        bits_full.append(float(f.cost.cross_bits.sum()))
+        bits_abl.append(float(a.cost.cross_bits.sum()))
         emit(f"fig12_t{t}", 0.0,
-             f"drlgo={f['system_cost']:.2f};drl_only={a['system_cost']:.2f}")
+             f"drlgo={costs_full[-1]:.2f};drl_only={costs_abl[-1]:.2f}")
     emit("fig12_summary", 0.0,
          f"drlgo_mean={np.mean(costs_full):.2f};"
          f"drl_only_mean={np.mean(costs_abl):.2f};"

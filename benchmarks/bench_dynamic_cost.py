@@ -3,18 +3,20 @@ user states (user count ramp, association ramp, mobility) on the three
 synthetic citation datasets, + cross-server communication cost (the (d)
 panels).
 
-DRLGO and PTOM are trained briefly (quick mode) on the dynamic-scenario
-protocol of §6.4 before evaluation; each method is evaluated ``repeats``
-times and averaged, as in the paper.
+All methods run through :class:`repro.core.api.GraphEdgeController` —
+one controller per offload-policy registry name, sharing the trainer's
+edge network. DRLGO and PTOM are trained briefly (quick mode) on the
+dynamic-scenario protocol of §6.4 before evaluation. The mobility panel
+moves users without touching the topology, so the controllers' partition
+cache skips every re-cut (reported at the end).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.core import costs
+from repro.core.api import GraphEdgeController
 from repro.core.dynamic_graph import random_scenario
-from repro.core.offload.baselines import run_greedy, run_random
 from repro.core.offload.drlgo import DRLGOTrainer, DRLGOTrainerConfig
 from repro.core.offload.env import OBS_DIM
 from repro.core.offload.ppo import PPOConfig, PTOMAgent
@@ -35,50 +37,80 @@ def _scenario_from_dataset(name: str, n_users: int, n_assoc: int,
     return make_graph_state(capacity, pos, sub.edges, sub.task_sizes_kb())
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, partitioner: str = "hicut_ref",
+        policy: str | None = None) -> None:
     caps = 64 if quick else 320
     user_axis = [24, 48] if quick else [50, 100, 150, 200, 250, 300]
     assoc_axis = [60, 120] if quick else [300, 600, 900, 1200, 1500, 1800]
     episodes = 60 if quick else 400
     datasets = ["synth-citeseer"] if quick else list(DATASETS)
 
-    # train DRLGO + PTOM once on the dynamic protocol, seeded from the
-    # dataset-derived scenario distribution (paper: sampled PubMed docs)
+    # --policy on the CLI restricts the comparison; resolve the selection
+    # BEFORE training so filtered-out learners never pay their train time
+    alias = {"drlgo": "drlgo", "ppo": "ptom", "greedy": "gm", "random": "rm"}
+    if policy is None:
+        selected = list(alias.values())
+    elif policy in alias or policy in alias.values():
+        selected = [alias.get(policy, policy)]
+    else:
+        from repro.core.api import available_offload_policies
+        if policy not in available_offload_policies():
+            raise ValueError(f"unknown offload policy {policy!r}; available: "
+                             f"{available_offload_policies()}")
+        selected = [policy]                 # e.g. "local": no training needed
+
+    # train DRLGO + PTOM (when selected) on the dynamic protocol, seeded
+    # from the dataset-derived scenario distribution (paper: sampled PubMed)
     init_sc = _scenario_from_dataset(datasets[0], user_axis[-1],
                                      assoc_axis[-1], caps, seed=0)
     tcfg = DRLGOTrainerConfig(capacity=caps, n_users=user_axis[-1],
                               n_assoc=assoc_axis[-1], episodes=episodes,
                               n_servers=M, warmup_steps=256, cost_scale=1.0,
+                              partitioner=partitioner,
                               initial_scenario=init_sc)
     tr = DRLGOTrainer(tcfg)
-    t_train = timeit(lambda: tr.train(), repeats=1)
-    emit("fig7_drlgo_train", t_train, f"episodes={episodes}")
+    if "drlgo" in selected:
+        t_train = timeit(lambda: tr.train(), repeats=1)
+        emit("fig7_drlgo_train", t_train, f"episodes={episodes}")
     ptom = PTOMAgent(PPOConfig(state_dim=M * OBS_DIM, n_actions=M))
-    for _ in range(episodes):
-        env = tr.make_env(tr.scenario)
-        ptom.run_episode(env)
+    if "ptom" in selected:
+        for _ in range(episodes):
+            env = tr.make_env(tr.scenario)
+            ptom.run_episode(env)
 
-    def eval_methods(tag, scenario, repeats=3):
-        drlgo = np.mean([tr.evaluate(scenario)["system_cost"]
-                         for _ in range(1)])
-        env_costs = {
-            "drlgo": drlgo,
-            "ptom": np.mean([ptom.run_episode(tr.make_env(scenario),
-                                              learn=False, explore=False)
-                             ["system_cost"] for _ in range(1)]),
-            "gm": run_greedy(tr.make_env(scenario))["system_cost"],
-            "rm": np.mean([run_random(tr.make_env(scenario), seed=s)
-                           ["system_cost"] for s in range(repeats)]),
-        }
-        cross = {
-            "drlgo": tr.evaluate(scenario)["cross_bits"],
-            "gm": run_greedy(tr.make_env(scenario))["cross_bits"],
-        }
-        for k, v in env_costs.items():
-            emit(f"{tag}_{k}", 0.0, f"system_cost={v:.3f}")
-        emit(f"{tag}_crossbits", 0.0,
-             f"drlgo={cross['drlgo']:.0f};gm={cross['gm']:.0f};"
-             f"reduction={1 - cross['drlgo'] / max(cross['gm'], 1):.2%}")
+    def make_controller(pol, **kw):
+        return GraphEdgeController(net=tr.net, policy=pol, policy_kwargs=kw,
+                                   partitioner=partitioner,
+                                   cost_scale=tcfg.cost_scale,
+                                   zeta_sp=tcfg.zeta_sp)
+
+    factories = {
+        "drlgo": lambda: make_controller("drlgo", trainer=tr),
+        "ptom": lambda: make_controller("ppo", agent=ptom),
+        "gm": lambda: make_controller("greedy"),
+        "rm": lambda: [make_controller("random", seed=s) for s in range(3)],
+    }
+    controllers = {name: factories.get(name, lambda n=name:
+                                       make_controller(n))()
+                   for name in selected}
+
+    def eval_methods(tag, scenario):
+        decisions = {}
+        for name, ctrl in controllers.items():
+            if isinstance(ctrl, list):        # RM: average over seeds
+                ds = [c.step(scenario) for c in ctrl]
+                cost = float(np.mean([float(d.cost.c) for d in ds]))
+                decisions[name] = ds[0]
+            else:
+                decisions[name] = d = ctrl.step(scenario)
+                cost = float(d.cost.c)
+            emit(f"{tag}_{name}", 0.0, f"system_cost={cost:.3f}")
+        if "drlgo" in decisions and "gm" in decisions:
+            cb = {k: float(decisions[k].cost.cross_bits.sum())
+                  for k in ("drlgo", "gm")}
+            emit(f"{tag}_crossbits", 0.0,
+                 f"drlgo={cb['drlgo']:.0f};gm={cb['gm']:.0f};"
+                 f"reduction={1 - cb['drlgo'] / max(cb['gm'], 1):.2%}")
 
     for ds in datasets:
         for n in user_axis:                          # Fig 7/8/9 (a)
@@ -87,7 +119,8 @@ def run(quick: bool = True) -> None:
         for e in assoc_axis:                         # Fig 7/8/9 (b)
             sc = _scenario_from_dataset(ds, user_axis[-1], e, caps, seed=e)
             eval_methods(f"fig789_{ds}_assoc{e}", sc)
-        # (c): mobility — same users, positions shuffled per step
+        # (c): mobility — same users, positions shuffled per step; the
+        # topology is unchanged so every controller reuses its cached cut
         rng = np.random.default_rng(0)
         sc = _scenario_from_dataset(ds, user_axis[-1], assoc_axis[-1],
                                     caps, seed=1)
@@ -96,7 +129,11 @@ def run(quick: bool = True) -> None:
         for t in range(2 if quick else 10):
             newp = rng.uniform(0, 2000, (caps, 2)).astype(np.float32)
             sc = move_users(sc, jnp.asarray(newp))
-            eval_methods(f"fig789_{ds}_move_t{t}", sc, repeats=2)
+            eval_methods(f"fig789_{ds}_move_t{t}", sc)
+    gm = controllers.get("gm")
+    if gm is not None:
+        emit("fig789_partition_cache", 0.0,
+             f"hits={gm.cache_hits};misses={gm.cache_misses}")
 
 
 if __name__ == "__main__":

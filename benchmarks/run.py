@@ -1,13 +1,33 @@
 """Benchmark entry: one module per paper table/figure. Prints
-``name,us_per_call,derived`` CSV. ``--full`` reproduces paper-scale axes."""
+``name,us_per_call,derived`` CSV. ``--full`` reproduces paper-scale axes.
+
+Control-plane strategies are selected by registry name
+(``repro.core.api``), e.g.::
+
+    PYTHONPATH=src:. python benchmarks/run.py \
+        --partitioner hicut_jax --policy drlgo
+
+Modules whose ``run()`` takes ``partitioner`` / ``policy`` kwargs receive
+the selection; the rest ignore it.
+"""
 from __future__ import annotations
 
-import sys
+import argparse
+import inspect
 import time
 
 
 def main() -> None:
-    quick = "--full" not in sys.argv
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale axes (slow)")
+    ap.add_argument("--partitioner", default="hicut_ref",
+                    help="partitioner registry name (repro.core.api)")
+    ap.add_argument("--policy", default=None,
+                    help="restrict control-plane benches to one offload "
+                         "policy registry name (default: compare all)")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     t0 = time.time()
     from benchmarks import (bench_ablation, bench_convergence,
@@ -18,8 +38,14 @@ def main() -> None:
                 bench_ablation):
         name = mod.__name__.split(".")[-1]
         t = time.time()
+        kwargs = {"quick": not args.full}
+        accepted = inspect.signature(mod.run).parameters
+        if "partitioner" in accepted:
+            kwargs["partitioner"] = args.partitioner
+        if "policy" in accepted and args.policy is not None:
+            kwargs["policy"] = args.policy
         try:
-            mod.run(quick=quick)
+            mod.run(**kwargs)
             print(f"# {name} done in {time.time() - t:.1f}s")
         except Exception as exc:      # keep the suite going, but loudly
             print(f"# {name} FAILED: {exc!r}")

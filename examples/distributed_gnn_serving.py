@@ -1,10 +1,11 @@
 """Distributed GNN serving over a virtual device mesh.
 
-    PYTHONPATH=src python examples/distributed_gnn_serving.py [--devices 4]
+    PYTHONPATH=src python examples/distributed_gnn_serving.py \
+        [--devices 4] [--partitioner hicut_ref]
 
 The serving-side realization of GraphEdge on a TPU-style mesh: edge
-servers → mesh devices, HiCut partition → vertex placement, message
-passing → halo-exchange all-gathers. Pre-trains a GCN on a synthetic
+servers → mesh devices, registry-selected partition → vertex placement,
+message passing → halo-exchange all-gathers. Pre-trains a GCN on a synthetic
 citation graph, then serves batched node-classification requests with the
 shard_map inference path and reports accuracy + ICI bytes (HiCut vs
 random placement).
@@ -21,6 +22,8 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--devices", type=int, default=4)
 ap.add_argument("--vertices", type=int, default=260)
 ap.add_argument("--requests", type=int, default=3)
+ap.add_argument("--partitioner", default="hicut_ref",
+                help="partitioner registry name (repro.core.api)")
 args = ap.parse_args()
 os.environ.setdefault(
     "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
@@ -29,7 +32,8 @@ import jax                                    # noqa: E402
 import numpy as np                            # noqa: E402
 from jax.sharding import Mesh                 # noqa: E402
 
-from repro.core.hicut import hicut_ref        # noqa: E402
+from repro.core.api import get_partitioner    # noqa: E402
+from repro.core.dynamic_graph import make_graph_state  # noqa: E402
 from repro.data.graphs import CORA, make_graph, sample_subgraph  # noqa
 from repro.gnn.distributed import (make_partition_plan,          # noqa
                                    distributed_gcn_forward)
@@ -50,8 +54,16 @@ def main() -> None:
     mesh = Mesh(np.array(jax.devices()[:p]), ("servers",))
     rng = np.random.default_rng(0)
 
+    # partition via the registry: vertices → subgraphs → devices
+    state = make_graph_state(sub.num_vertices,
+                             rng.uniform(0, 2000, (sub.num_vertices, 2)),
+                             sub.edges, sub.task_sizes_kb())
+    partition = get_partitioner(args.partitioner)(state)
+    print(f"{args.partitioner}: {partition.num_subgraphs} subgraphs, "
+          f"cut fraction {partition.cut_metrics['cut_fraction']:.2f}")
+
     for name, assign in (
-            ("hicut", hicut_ref(sub.num_vertices, sub.edges) % p),
+            (args.partitioner, partition.to_device_assignment(p)),
             ("random", rng.integers(0, p, sub.num_vertices))):
         plan = make_partition_plan(adj, assign, p)
         out = None

@@ -1,10 +1,12 @@
-"""GraphEdge quickstart: perceive → HiCut → DRLGO offload → cost report.
+"""GraphEdge quickstart: perceive → partition → offload → cost report.
 
-    PYTHONPATH=src python examples/quickstart.py [--episodes 40]
+    PYTHONPATH=src python examples/quickstart.py \
+        [--episodes 40] [--partitioner hicut_jax] [--policy drlgo]
 
 Builds a small dynamic EC scenario (users on a 2000 m plane, 4 edge
-servers), trains DRLGO briefly, then runs one GraphEdge control step and
-compares against the greedy / random baselines.
+servers), trains DRLGO briefly, then runs GraphEdge control steps through
+the pluggable :class:`repro.core.api.GraphEdgeController` and compares
+against baseline policies — all selected by registry name.
 """
 from __future__ import annotations
 
@@ -12,42 +14,87 @@ import argparse
 
 import numpy as np
 
-from repro.core.offload.baselines import run_greedy, run_random
+from repro.core.api import (GraphEdgeController, available_offload_policies,
+                            available_partitioners)
 from repro.core.offload.drlgo import DRLGOTrainer, DRLGOTrainerConfig
-from repro.core.system import GraphEdge
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--episodes", type=int, default=40)
     ap.add_argument("--users", type=int, default=32)
+    ap.add_argument("--partitioner", default="hicut_jax",
+                    choices=available_partitioners())
+    ap.add_argument("--policy", default="drlgo",
+                    choices=available_offload_policies())
+    ap.add_argument("--steps", type=int, default=3,
+                    help="dynamic control steps to roll out")
     args = ap.parse_args()
 
     cfg = DRLGOTrainerConfig(capacity=args.users + 8, n_users=args.users,
                              n_assoc=3 * args.users,
                              episodes=args.episodes, warmup_steps=256,
-                             cost_scale=1.0)
+                             cost_scale=1.0, partitioner=args.partitioner)
     trainer = DRLGOTrainer(cfg)
-    print(f"training DRLGO for {args.episodes} episodes "
-          f"({args.users} users, 4 edge servers)...")
-    trainer.train(log_every=max(args.episodes // 4, 1))
+    kw = {}
+    if args.policy == "drlgo":
+        print(f"training DRLGO for {args.episodes} episodes "
+              f"({args.users} users, 4 edge servers)...")
+        trainer.train(log_every=max(args.episodes // 4, 1))
+        kw = {"trainer": trainer}
+    elif args.policy == "ppo":
+        from repro.core.dynamic_graph import perturb_scenario
+        from repro.core.offload.env import OBS_DIM
+        from repro.core.offload.ppo import PPOConfig, PTOMAgent
+        print(f"training PTOM (PPO) for {args.episodes} episodes "
+              f"({args.users} users, 4 edge servers)...")
+        ptom = PTOMAgent(PPOConfig(state_dim=4 * OBS_DIM, n_actions=4))
+        for _ in range(args.episodes):
+            trainer.scenario = perturb_scenario(trainer.rng, trainer.scenario,
+                                                cfg.change_rate)
+            ptom.run_episode(trainer.make_env(trainer.scenario))
+        kw = {"agent": ptom}
 
-    system = GraphEdge(trainer)
-    result = system.offload(trainer.scenario)
-    print("\n=== GraphEdge control step ===")
-    print(f"subgraphs (HiCut):     {result['num_subgraphs']}")
-    print(f"system cost C:         {result['system_cost']:.3f}  "
-          f"(T_all={result['t_all']:.3f}s, I_all={result['i_all']:.3f}J)")
-    print(f"cross-server traffic:  {result['cross_bits'] / 8e6:.2f} MB")
+    def controller(policy, **kw):
+        return GraphEdgeController(net=trainer.net, policy=policy,
+                                   policy_kwargs=kw,
+                                   partitioner=args.partitioner,
+                                   zeta_sp=cfg.zeta_sp,
+                                   cost_scale=cfg.cost_scale)
 
-    gm = run_greedy(trainer.make_env(trainer.scenario))
-    rm = np.mean([run_random(trainer.make_env(trainer.scenario), seed=s)
-                  ["system_cost"] for s in range(5)])
+    system = controller(args.policy, **kw)
+    decision = system.step(trainer.scenario)
+    print(f"\n=== GraphEdge control step "
+          f"({args.partitioner} + {args.policy}) ===")
+    print(f"subgraphs:             {decision.partition.num_subgraphs}  "
+          f"(cut fraction {decision.partition.cut_metrics['cut_fraction']:.2f})")
+    print(f"system cost C:         {float(decision.cost.c):.3f}  "
+          f"(T_all={float(decision.cost.t_all):.3f}s, "
+          f"I_all={float(decision.cost.i_all):.3f}J)")
+    print(f"cross-server traffic:  "
+          f"{float(decision.cost.cross_bits.sum()) / 8e6:.2f} MB")
+
+    # multi-step control under the dynamic-graph event model (§3.2)
+    decisions = system.rollout(trainer.scenario, args.steps,
+                               np.random.default_rng(0))
+    costs_t = ", ".join(f"{float(d.cost.c):.3f}" for d in decisions)
+    print(f"rollout over {args.steps} dynamic steps: C(t) = [{costs_t}]  "
+          f"(partition cache: {system.cache_hits} hits, "
+          f"{system.cache_misses} misses)")
+
+    # serving bridge: the decision directly yields a halo-exchange plan
+    plan = decision.to_partition_plan()
+    print(f"serving plan:          {plan.num_devices} devices, "
+          f"halo {plan.halo} rows/device, "
+          f"{plan.bytes_per_aggregate(64)} B/aggregation @64 features")
+
     print("\n=== baselines ===")
-    print(f"greedy (GM) cost:      {gm['system_cost']:.3f}")
-    print(f"random (RM) cost:      {rm:.3f}")
-    print(f"DRLGO cost saving vs GM: "
-          f"{1 - result['system_cost'] / gm['system_cost']:+.1%}")
+    results = {}
+    for name in ("greedy", "random"):
+        results[name] = float(controller(name).step(trainer.scenario).cost.c)
+        print(f"{name:6s} cost:           {results[name]:.3f}")
+    print(f"{args.policy} cost saving vs greedy: "
+          f"{1 - float(decision.cost.c) / results['greedy']:+.1%}")
 
 
 if __name__ == "__main__":

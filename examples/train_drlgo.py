@@ -24,6 +24,8 @@ def main() -> None:
     ap.add_argument("--servers", type=int, default=4)
     ap.add_argument("--change-rate", type=float, default=0.2)
     ap.add_argument("--zeta", type=float, default=0.1)
+    ap.add_argument("--partitioner", default="hicut_ref",
+                    help="partitioner registry name (repro.core.api)")
     ap.add_argument("--ckpt", default="/tmp/drlgo_ckpt.npz")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -33,7 +35,7 @@ def main() -> None:
         n_assoc=3 * args.users, n_servers=args.servers,
         episodes=args.episodes, change_rate=args.change_rate,
         zeta_sp=args.zeta, warmup_steps=512, cost_scale=1.0,
-        seed=args.seed)
+        partitioner=args.partitioner, seed=args.seed)
     trainer = DRLGOTrainer(cfg)
     hist = trainer.train(log_every=max(args.episodes // 20, 1))
 

@@ -1,0 +1,406 @@
+"""GraphEdge control-plane API: pluggable perceive → partition → offload → serve.
+
+The paper's architecture (Figs. 1–2) is a single control loop — perceive the
+user topology, cut it with HiCut (§4), offload with DRLGO (§5), serve the
+distributed GNN inference and account the exact system cost (Eqs. 12–14).
+This module exposes that loop behind three swappable pieces:
+
+* :class:`Partitioner` — ``partition(state) -> Partition``; implementations
+  are registered by name (``hicut_jax`` [default, jit-able], ``hicut_ref``,
+  ``mincut``, ``none``) and selected with :func:`get_partitioner`.
+* :class:`OffloadPolicy` — ``policy(env) -> Assignment``; registered names
+  are ``drlgo``, ``ppo``, ``greedy``, ``random``, ``local``
+  (:func:`get_offload_policy`).
+* :class:`GraphEdgeController` — composes the two. ``step(state)`` runs one
+  control step and returns a :class:`Decision` carrying the assignment, the
+  partition and the full :class:`~repro.core.costs.SystemCost`; ``rollout``
+  drives multiple steps through the dynamic-graph event model (§3.2).
+  Partitions are cached across steps whose topology (mask + adjacency) is
+  unchanged — pure mobility steps never re-run the cut.
+
+A :class:`Decision` bridges directly into serving:
+``decision.to_partition_plan(P)`` feeds
+:func:`repro.gnn.distributed.make_partition_plan` →
+:func:`~repro.gnn.distributed.distributed_gcn_forward`
+(see ``repro.launch.serve_gnn`` and DESIGN.md for the full data path).
+
+Registries are plain dicts of factories; third-party strategies plug in with
+:func:`register_partitioner` / :func:`register_offload_policy`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costs
+from repro.core.dynamic_graph import GraphState, perturb_scenario
+from repro.core.hicut import cut_metrics, hicut_jax, hicut_ref
+from repro.core.offload.env import OffloadEnv
+
+
+def state_edges(state: GraphState) -> np.ndarray:
+    """Upper-triangular edge list [(i, j)] of the (masked) layout G(t)."""
+    return np.transpose(np.nonzero(np.triu(np.asarray(state.adj))))
+
+
+# ---------------------------------------------------------------------------
+# partitioning (subproblem P1)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Partition:
+    """Result of graph-layout optimization: vertex → subgraph ids."""
+    subgraph: np.ndarray          # [N] int64 subgraph id (−1 = inactive)
+    method: str                   # registry name that produced it
+    cut_metrics: dict = field(default_factory=dict)
+
+    @property
+    def num_subgraphs(self) -> int:
+        ids = self.subgraph[self.subgraph >= 0]
+        return int(len(np.unique(ids)))
+
+    def to_device_assignment(self, num_devices: int) -> np.ndarray:
+        """Subgraph ids → device/server ids (id mod P; −1 preserved)."""
+        out = np.asarray(self.subgraph, np.int64).copy()
+        out[out >= 0] %= num_devices
+        return out
+
+
+@runtime_checkable
+class Partitioner(Protocol):
+    """Graph-layout optimizer: ``G(t) → G_sub`` (paper §4, P1)."""
+    name: str
+
+    def __call__(self, state: GraphState) -> Partition: ...
+
+
+_PARTITIONERS: dict[str, Callable[..., Partitioner]] = {}
+
+
+def register_partitioner(name: str):
+    """Register a partitioner factory under ``name`` (decorator)."""
+    def deco(factory: Callable[..., Partitioner]):
+        _PARTITIONERS[name] = factory
+        return factory
+    return deco
+
+
+def available_partitioners() -> tuple[str, ...]:
+    return tuple(sorted(_PARTITIONERS))
+
+
+def get_partitioner(name: str, **kwargs: Any) -> Partitioner:
+    """Instantiate a registered partitioner by name."""
+    try:
+        factory = _PARTITIONERS[name]
+    except KeyError:
+        raise ValueError(f"unknown partitioner {name!r}; available: "
+                         f"{available_partitioners()}") from None
+    return factory(**kwargs)
+
+
+def _finish(state: GraphState, assigned: np.ndarray, method: str) -> Partition:
+    assigned = np.asarray(assigned, np.int64)
+    metrics = cut_metrics(state.capacity, state_edges(state), assigned)
+    return Partition(assigned, method, metrics)
+
+
+@register_partitioner("hicut_jax")
+class _HiCutJax:
+    """Fixed-shape jit-able HiCut (Algorithm 1) on the masked dense layout."""
+    name = "hicut_jax"
+
+    def __call__(self, state: GraphState) -> Partition:
+        assigned = np.asarray(hicut_jax(state.adj, state.mask))
+        return _finish(state, assigned, self.name)
+
+
+@register_partitioner("hicut_ref")
+class _HiCutRef:
+    """Numpy adjacency-list transcription of Algorithm 1 (the oracle)."""
+    name = "hicut_ref"
+
+    def __call__(self, state: GraphState) -> Partition:
+        active = np.asarray(state.mask) > 0
+        assigned = hicut_ref(state.capacity, state_edges(state), active=active)
+        return _finish(state, assigned, self.name)
+
+
+@register_partitioner("mincut")
+class _MinCut:
+    """Iterated pairwise max-flow min-cut baseline (Zeng et al. [36])."""
+    name = "mincut"
+
+    def __init__(self, num_parts: int = 4, seed: int = 0,
+                 weight_range: tuple[int, int] = (1, 100)):
+        self.num_parts = num_parts
+        self.seed = seed
+        self.weight_range = weight_range
+
+    def __call__(self, state: GraphState) -> Partition:
+        from repro.core.mincut_baseline import mincut_partition_state
+        assigned = mincut_partition_state(state, self.num_parts,
+                                          seed=self.seed,
+                                          weight_range=self.weight_range)
+        return _finish(state, assigned, self.name)
+
+
+@register_partitioner("none")
+class _NoPartition:
+    """Every active vertex its own subgraph — the DRL-only ablation (Fig 12)."""
+    name = "none"
+
+    def __call__(self, state: GraphState) -> Partition:
+        assigned = np.arange(state.capacity, dtype=np.int64)
+        assigned[np.asarray(state.mask) <= 0] = -1
+        return _finish(state, assigned, self.name)
+
+
+# ---------------------------------------------------------------------------
+# offloading (subproblem P2)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Assignment:
+    """Graph offloading decision w: user → edge server (C1 holds)."""
+    servers: np.ndarray           # [N] int64 server id (−1 = inactive)
+    reward: float = 0.0           # Σ per-step rewards (Eq. 23)
+    stats: dict = field(default_factory=dict)
+
+    def onehot(self, m: int) -> jnp.ndarray:
+        return costs.assignment_onehot(jnp.asarray(self.servers), m)
+
+
+@runtime_checkable
+class OffloadPolicy(Protocol):
+    """Task scheduler: rolls an :class:`OffloadEnv` episode → Assignment."""
+    name: str
+
+    def __call__(self, env: OffloadEnv) -> Assignment: ...
+
+
+_POLICIES: dict[str, Callable[..., OffloadPolicy]] = {}
+
+
+def register_offload_policy(name: str):
+    def deco(factory: Callable[..., OffloadPolicy]):
+        _POLICIES[name] = factory
+        return factory
+    return deco
+
+
+def available_offload_policies() -> tuple[str, ...]:
+    return tuple(sorted(_POLICIES))
+
+
+def get_offload_policy(name: str, **kwargs: Any) -> OffloadPolicy:
+    """Instantiate a registered offloading policy by name."""
+    try:
+        factory = _POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown offload policy {name!r}; available: "
+                         f"{available_offload_policies()}") from None
+    return factory(**kwargs)
+
+
+def _episode_assignment(env: OffloadEnv, stats: dict, name: str) -> Assignment:
+    return Assignment(env.assign.copy(), float(stats.get("reward", 0.0)),
+                      dict(stats))
+
+
+@register_offload_policy("greedy")
+class _Greedy:
+    """GM: each user to the nearest non-full edge server (§6.1)."""
+    name = "greedy"
+
+    def __call__(self, env: OffloadEnv) -> Assignment:
+        from repro.core.offload.baselines import run_greedy
+        return _episode_assignment(env, run_greedy(env), self.name)
+
+
+@register_offload_policy("random")
+class _Random:
+    """RM: each user to a uniformly random server (§6.1)."""
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def __call__(self, env: OffloadEnv) -> Assignment:
+        from repro.core.offload.baselines import run_random
+        return _episode_assignment(env, run_random(env, seed=self.seed),
+                                   self.name)
+
+
+@register_offload_policy("local")
+class _Local:
+    """LM: each user to its geographically nearest server, ignoring load."""
+    name = "local"
+
+    def __call__(self, env: OffloadEnv) -> Assignment:
+        from repro.core.offload.baselines import run_local
+        return _episode_assignment(env, run_local(env), self.name)
+
+
+@register_offload_policy("drlgo")
+class _DRLGO:
+    """The paper's MADDPG policy; wraps a (trained) DRLGOTrainer's actors."""
+    name = "drlgo"
+
+    def __init__(self, trainer):
+        self.trainer = trainer
+
+    def __call__(self, env: OffloadEnv) -> Assignment:
+        stats = self.trainer.run_episode(env, explore=False, learn=False)
+        return _episode_assignment(env, stats, self.name)
+
+
+@register_offload_policy("ppo")
+class _PPO:
+    """PTOM baseline: single-agent PPO over the global state (§6.1)."""
+    name = "ppo"
+
+    def __init__(self, agent=None, seed: int = 0):
+        self.agent = agent
+        self.seed = seed
+
+    def __call__(self, env: OffloadEnv) -> Assignment:
+        if self.agent is None:        # lazily size the nets from the env
+            from repro.core.offload.env import OBS_DIM
+            from repro.core.offload.ppo import PPOConfig, PTOMAgent
+            self.agent = PTOMAgent(PPOConfig(state_dim=env.m * OBS_DIM,
+                                             n_actions=env.m), seed=self.seed)
+        stats = self.agent.run_episode(env, learn=False, explore=False)
+        return _episode_assignment(env, stats, self.name)
+
+
+# ---------------------------------------------------------------------------
+# the controller
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Decision:
+    """One control step's output: who runs where, and what it costs."""
+    state: GraphState
+    partition: Partition
+    assignment: Assignment
+    cost: costs.SystemCost
+
+    @property
+    def servers(self) -> np.ndarray:
+        return self.assignment.servers
+
+    def to_partition_plan(self, num_devices: int | None = None):
+        """Bridge into serving: decision → halo-exchange PartitionPlan.
+
+        The offload assignment (user → server) becomes the vertex → device
+        placement (server ids folded mod P when P differs from M), ready for
+        :func:`repro.gnn.distributed.distributed_gcn_forward`."""
+        from repro.gnn.distributed import make_partition_plan
+        m = int(np.asarray(self.cost.t_tran).shape[0])
+        p = m if num_devices is None else num_devices
+        assign = np.asarray(self.servers, np.int64).copy()
+        assign[assign >= 0] %= p
+        return make_partition_plan(np.asarray(self.state.adj), assign, p)
+
+    def summary(self) -> dict:
+        """Flat dict in the legacy ``GraphEdge.offload`` result format."""
+        return {
+            "assignment": self.servers.copy(),
+            "subgraphs": self.partition.subgraph.copy(),
+            "num_subgraphs": self.partition.num_subgraphs,
+            "reward": self.assignment.reward,
+            "system_cost": float(self.cost.c),
+            "t_all": float(self.cost.t_all),
+            "i_all": float(self.cost.i_all),
+            "cross_bits": float(self.cost.cross_bits.sum()),
+            **{k: v for k, v in self.assignment.stats.items()
+               if k not in ("reward", "system_cost", "t_all", "i_all",
+                            "cross_bits")},
+        }
+
+
+@dataclass
+class GraphEdgeController:
+    """EC controller: perceive → partition → offload → account, pluggable.
+
+    ``partitioner`` / ``policy`` accept either registry names or instances;
+    kwargs for name-based construction go in ``partitioner_kwargs`` /
+    ``policy_kwargs`` (e.g. ``policy="drlgo",
+    policy_kwargs={"trainer": trainer}``).
+    """
+    net: costs.EdgeNetwork
+    policy: OffloadPolicy | str = "greedy"
+    partitioner: Partitioner | str = "hicut_jax"
+    policy_kwargs: dict = field(default_factory=dict)
+    partitioner_kwargs: dict = field(default_factory=dict)
+    gnn: costs.GNNCostParams = field(default_factory=costs.GNNCostParams)
+    zeta_sp: float = 0.1          # ζ (Eq. 25)
+    cost_scale: float = 1.0       # reward normalizer
+    use_subgraph_reward: bool | None = None   # None → auto (off for "none")
+    cache_partitions: bool = True
+
+    def __post_init__(self):
+        if isinstance(self.partitioner, str):
+            self.partitioner = get_partitioner(self.partitioner,
+                                               **self.partitioner_kwargs)
+        if isinstance(self.policy, str):
+            self.policy = get_offload_policy(self.policy,
+                                             **self.policy_kwargs)
+        if self.use_subgraph_reward is None:
+            self.use_subgraph_reward = self.partitioner.name != "none"
+        self._cache_key: tuple | None = None
+        self._cache_val: Partition | None = None
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    # -- perceive + partition (cached on topology) --------------------------
+    def partition(self, state: GraphState) -> Partition:
+        """Run (or reuse) the partitioner. The cut depends only on the
+        topology (mask + adjacency), so pure-mobility steps hit the cache."""
+        if not self.cache_partitions:
+            return self.partitioner(state)
+        key = (np.asarray(state.mask).tobytes(),
+               np.asarray(state.adj).tobytes())
+        if key == self._cache_key and self._cache_val is not None:
+            self.cache_hits += 1
+            return self._cache_val
+        self.cache_misses += 1
+        part = self.partitioner(state)
+        self._cache_key, self._cache_val = key, part
+        return part
+
+    def make_env(self, state: GraphState,
+                 partition: Partition | None = None) -> OffloadEnv:
+        part = self.partition(state) if partition is None else partition
+        return OffloadEnv(self.net, state, part, gnn=self.gnn,
+                          zeta_sp=self.zeta_sp,
+                          use_subgraph_reward=bool(self.use_subgraph_reward),
+                          cost_scale=self.cost_scale)
+
+    # -- one control step ----------------------------------------------------
+    def step(self, state: GraphState) -> Decision:
+        """Perceive → HiCut (or plug-in) → offload → exact cost accounting."""
+        part = self.partition(state)
+        env = self.make_env(state, part)
+        assignment = self.policy(env)
+        w = assignment.onehot(int(self.net.server_pos.shape[0]))
+        sc = costs.system_cost(self.net, state, w, self.gnn)
+        return Decision(state, part, assignment, sc)
+
+    # -- multi-step control --------------------------------------------------
+    def rollout(self, state: GraphState, steps: int,
+                rng: np.random.Generator | None = None,
+                change_rate: float = 0.2) -> list[Decision]:
+        """Drive ``steps`` control steps through the dynamic-graph event
+        model (§3.2 / §6.4): each step perturbs user count, positions and
+        associations at ``change_rate``, then runs :meth:`step`."""
+        rng = np.random.default_rng(0) if rng is None else rng
+        decisions = []
+        for _ in range(steps):
+            state = perturb_scenario(rng, state, change_rate)
+            decisions.append(self.step(state))
+        return decisions

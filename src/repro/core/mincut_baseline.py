@@ -124,3 +124,21 @@ def pairwise_mincut_partition(n: int, edges: np.ndarray, weights: np.ndarray,
     finally:
         sys.setrecursionlimit(old_limit)
     return assign
+
+
+def mincut_partition_state(state, num_parts: int, seed: int = 0,
+                           weight_range: tuple[int, int] = (1, 100)
+                           ) -> np.ndarray:
+    """Run the baseline on a ``GraphState`` layout → [N] part ids (−1 for
+    inactive vertices). Edge weights are random integers in ``weight_range``
+    as the paper describes; this is the ``mincut`` entry of the
+    ``repro.core.api`` partitioner registry."""
+    from repro.core.api import state_edges   # function-level: keep this
+    edges = state_edges(state)               # module numpy-only otherwise
+    rng = np.random.default_rng(seed)
+    weights = rng.integers(weight_range[0], weight_range[1] + 1,
+                           len(edges))
+    assign = pairwise_mincut_partition(state.capacity, edges, weights,
+                                       num_parts, seed=seed)
+    assign[np.asarray(state.mask) <= 0] = -1
+    return assign

@@ -1,9 +1,30 @@
-"""Non-learning offloading baselines (paper §6.1): GM and RM."""
+"""Non-learning offloading baselines: GM and RM (paper §6.1), plus LM.
+
+Each baseline drives an :class:`OffloadEnv` episode to completion and
+returns the standard stats dict; the registry adapters in
+``repro.core.api`` expose them as ``greedy`` / ``random`` / ``local``
+offload policies.
+"""
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.offload.env import OffloadEnv
+
+
+def _force_server(env: OffloadEnv, k: int) -> np.ndarray:
+    """Action block that deterministically routes the current user to k."""
+    acts = np.zeros((env.m, 2), np.float32)
+    acts[:, 1] = 1.0
+    acts[k, 0] = 2.0
+    return acts
+
+
+def _episode_stats(env: OffloadEnv, total_r: float) -> dict:
+    final = env.final_cost()
+    return {"reward": total_r, "system_cost": float(final.c),
+            "t_all": float(final.t_all), "i_all": float(final.i_all),
+            "cross_bits": float(final.cross_bits.sum())}
 
 
 def run_greedy(env: OffloadEnv) -> dict:
@@ -17,15 +38,9 @@ def run_greedy(env: OffloadEnv) -> dict:
         if not np.isfinite(d).any():
             d = env.d_im[i]
         k = int(np.argmin(d))
-        acts = np.zeros((env.m, 2), np.float32)
-        acts[:, 1] = 1.0
-        acts[k, 0] = 2.0
-        _, _, rew, _, _ = env.step(acts)
+        _, _, rew, _, _ = env.step(_force_server(env, k))
         total_r += float(rew.sum())
-    final = env.final_cost()
-    return {"reward": total_r, "system_cost": float(final.c),
-            "t_all": float(final.t_all), "i_all": float(final.i_all),
-            "cross_bits": float(final.cross_bits.sum())}
+    return _episode_stats(env, total_r)
 
 
 def run_random(env: OffloadEnv, seed: int = 0) -> dict:
@@ -35,12 +50,18 @@ def run_random(env: OffloadEnv, seed: int = 0) -> dict:
     total_r = 0.0
     while env.t < env.num_steps:
         k = int(rng.integers(env.m))
-        acts = np.zeros((env.m, 2), np.float32)
-        acts[:, 1] = 1.0
-        acts[k, 0] = 2.0
-        _, _, rew, _, _ = env.step(acts)
+        _, _, rew, _, _ = env.step(_force_server(env, k))
         total_r += float(rew.sum())
-    final = env.final_cost()
-    return {"reward": total_r, "system_cost": float(final.c),
-            "t_all": float(final.t_all), "i_all": float(final.i_all),
-            "cross_bits": float(final.cross_bits.sum())}
+    return _episode_stats(env, total_r)
+
+
+def run_local(env: OffloadEnv) -> dict:
+    """LM: offload each user to its nearest server, ignoring server load
+    (pure locality — the env still enforces capacity via eligibility)."""
+    env.reset()
+    total_r = 0.0
+    while env.t < env.num_steps:
+        k = int(np.argmin(env.d_im[env.current_user()]))
+        _, _, rew, _, _ = env.step(_force_server(env, k))
+        total_r += float(rew.sum())
+    return _episode_stats(env, total_r)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import costs
+from repro.core.api import get_partitioner, state_edges
 from repro.core.dynamic_graph import GraphState, random_scenario, \
     perturb_scenario
 from repro.core.hicut import hicut_ref
@@ -24,11 +25,12 @@ from repro.core.offload.maddpg import (MADDPGConfig, ReplayBuffer,
 
 
 def hicut_partition(state: GraphState) -> np.ndarray:
-    """Run HiCut (ref impl) on a GraphState → [N] subgraph ids."""
-    adj = np.asarray(state.adj)
+    """Run HiCut (ref impl) on a GraphState → [N] subgraph ids.
+
+    Kept as a convenience wrapper; the registry equivalent is
+    ``get_partitioner("hicut_ref")(state).subgraph``."""
     mask = np.asarray(state.mask) > 0
-    edges = np.transpose(np.nonzero(np.triu(adj)))
-    return hicut_ref(state.capacity, edges, active=mask)
+    return hicut_ref(state.capacity, state_edges(state), active=mask)
 
 
 @dataclass
@@ -41,11 +43,20 @@ class DRLGOTrainerConfig:
     change_rate: float = 0.2      # §6.4 dynamic change rate
     zeta_sp: float = 0.1          # ζ (Eq. 25) — balances R_sp vs ΔC in reward
     use_hicut: bool = True        # False → the DRL-only ablation (Fig. 12)
+    partitioner: str | None = None  # registry name; None → use_hicut default
     cost_scale: float = 20.0      # reward normalizer
     updates_per_step: int = 1
     warmup_steps: int = 512
     seed: int = 0
     initial_scenario: GraphState | None = None   # e.g. dataset-derived
+
+    @property
+    def partitioner_name(self) -> str:
+        """Registry name of the training-time partitioner. ``use_hicut``
+        keeps its historical meaning (False → the DRL-only ablation)."""
+        if self.partitioner is not None:
+            return self.partitioner
+        return "hicut_ref" if self.use_hicut else "none"
 
 
 @dataclass
@@ -67,17 +78,20 @@ class DRLGOTrainer:
                                          self.cfg.n_assoc))
         self.net = costs.default_network(self.rng, self.cfg.capacity,
                                          self.cfg.n_servers)
+        self.partitioner = get_partitioner(self.cfg.partitioner_name)
         self.history: list[dict] = []
 
     def make_env(self, scenario: GraphState) -> OffloadEnv:
-        if self.cfg.use_hicut:
-            sub = hicut_partition(scenario)
-        else:  # DRL-only ablation: every vertex its own "subgraph"
-            sub = np.arange(scenario.capacity)
+        sub = self.partitioner(scenario)
         return OffloadEnv(self.net, scenario, sub,
                           zeta_sp=self.cfg.zeta_sp,
-                          use_subgraph_reward=self.cfg.use_hicut,
+                          use_subgraph_reward=self.partitioner.name != "none",
                           cost_scale=self.cfg.cost_scale)
+
+    def as_policy(self):
+        """This trainer's (current) actors as a registry-compatible policy."""
+        from repro.core.api import get_offload_policy
+        return get_offload_policy("drlgo", trainer=self)
 
     def run_episode(self, env: OffloadEnv, explore: bool = True,
                     learn: bool = True) -> dict:

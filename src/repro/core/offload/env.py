@@ -16,7 +16,8 @@ Observations are a fixed-size featurization of Eq. (20): the current user's
 (position, |N_i|, X_i, uplink bandwidth/distance to the agent's server), the
 server's remaining service capacity and f_k, and subgraph-placement context.
 The paper's raw O_m is variable-length (all users in scope); a fixed
-featurization is the standard practical choice and is noted in DESIGN.md.
+featurization is the standard practical choice — the per-dimension layout is
+documented in DESIGN.md ("Observation featurization").
 
 All incremental cost arithmetic reuses the constants and formulas of
 ``repro.core.costs`` (checked against the batch ``system_cost`` in tests).
@@ -39,13 +40,17 @@ ACT_DIM = 2   # Eq. (22)
 class OffloadEnv:
     net: EdgeNetwork
     state: GraphState
-    subgraph: np.ndarray            # [N] int  — HiCut subgraph id (−1 masked)
+    subgraph: np.ndarray            # [N] int  — subgraph id (−1 masked); also
+                                    # accepts a repro.core.api.Partition
     gnn: GNNCostParams = field(default_factory=GNNCostParams)
     zeta_sp: float = 1.0            # ζ in Eq. (25)
     use_subgraph_reward: bool = True  # False → the DRL-only ablation
     cost_scale: float = 1.0         # reward normalizer (does not change argmin)
 
     def __post_init__(self):
+        if hasattr(self.subgraph, "subgraph"):    # api.Partition
+            self.subgraph = self.subgraph.subgraph
+        self.subgraph = np.asarray(self.subgraph, np.int64)
         self.m = int(self.net.server_pos.shape[0])
         self.n = int(self.state.capacity)
         self.mask = np.asarray(self.state.mask) > 0

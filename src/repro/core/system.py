@@ -1,40 +1,49 @@
-"""GraphEdge — the top-level architecture (paper Figs. 1–2).
+"""Deprecated ``GraphEdge`` facade — use :mod:`repro.core.api` instead.
 
-Processing flow per time step:
-  1. perceive the user topology → dynamic graph layout G(t) (§3.2),
-  2. optimize the layout with HiCut → G_sub (§4, subproblem P1),
-  3. run the (trained) DRLGO policy → graph offloading decision w (§5, P2),
-  4. broadcast w; the offloaded tasks feed distributed GNN inference
-     (``repro.gnn.distributed``), and the exact system cost (Eqs. 12–14)
-     is accounted.
+The top-level architecture (paper Figs. 1–2) now lives behind the pluggable
+:class:`repro.core.api.GraphEdgeController`:
+
+    controller = GraphEdgeController(net=trainer.net, policy="drlgo",
+                                     policy_kwargs={"trainer": trainer},
+                                     partitioner="hicut_jax")
+    decision = controller.step(scenario)
+
+This module keeps the old one-shot ``GraphEdge.offload`` entry point working
+for one release; it delegates to a controller configured exactly like the
+legacy wiring (``hicut_ref`` + the trainer's MADDPG actors) and returns the
+same flat stats dict.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
-import numpy as np
-
-from repro.core import costs
+from repro.core.api import GraphEdgeController
 from repro.core.dynamic_graph import GraphState
-from repro.core.offload.drlgo import DRLGOTrainer, hicut_partition
-from repro.core.offload.env import OffloadEnv
+from repro.core.offload.drlgo import DRLGOTrainer
 
 
 @dataclass
 class GraphEdge:
-    """EC-controller facade: perceive → HiCut → offload → account."""
+    """Deprecated EC-controller facade: perceive → HiCut → offload → account.
+
+    .. deprecated:: PR 1
+        Use :class:`repro.core.api.GraphEdgeController`.
+    """
     trainer: DRLGOTrainer
+
+    def __post_init__(self):
+        warnings.warn(
+            "GraphEdge is deprecated; use repro.core.api.GraphEdgeController"
+            " (policy='drlgo', partitioner='hicut_ref') instead.",
+            DeprecationWarning, stacklevel=2)
+        self._controller = GraphEdgeController(
+            net=self.trainer.net,
+            policy="drlgo", policy_kwargs={"trainer": self.trainer},
+            partitioner="hicut_ref",
+            zeta_sp=self.trainer.cfg.zeta_sp,
+            cost_scale=self.trainer.cfg.cost_scale)
 
     def offload(self, scenario: GraphState) -> dict:
         """One control step: returns assignment + full cost accounting."""
-        sub = hicut_partition(scenario)
-        env = OffloadEnv(self.trainer.net, scenario, sub,
-                         zeta_sp=self.trainer.cfg.zeta_sp,
-                         cost_scale=self.trainer.cfg.cost_scale)
-        stats = self.trainer.run_episode(env, explore=False, learn=False)
-        return {
-            "assignment": env.assign.copy(),
-            "subgraphs": sub,
-            "num_subgraphs": int(len(np.unique(sub[sub >= 0]))),
-            **stats,
-        }
+        return self._controller.step(scenario).summary()

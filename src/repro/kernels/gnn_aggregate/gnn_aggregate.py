@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+# jax<0.5 names this TPUCompilerParams; newer releases renamed it to CompilerParams
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 def _agg_kernel(a_ref, x_ref, rs_ref, cs_ref, o_ref, *, n_k: int):
@@ -60,7 +62,7 @@ def gnn_aggregate_pallas(adj: jnp.ndarray, x: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((bm, bf), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(adj, x, jnp.broadcast_to(row_scale, (n,)).astype(jnp.float32),

@@ -6,6 +6,9 @@
 Runs the same ``decode_step`` (serve_step) the decode-shape dry-runs lower:
 teacher-forced prefill fills the cache token by token, then greedy decode
 generates. ``--kv-int8`` turns on the §Perf-3 quantized cache.
+
+For the GraphEdge control-plane serving path (controller decision →
+partition plan → distributed GNN inference) see ``repro.launch.serve_gnn``.
 """
 from __future__ import annotations
 

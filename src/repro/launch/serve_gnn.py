@@ -1,0 +1,92 @@
+"""Distributed GNN serving launcher driven by the GraphEdge controller.
+
+    PYTHONPATH=src python -m repro.launch.serve_gnn --devices 4 \
+        --users 48 --partitioner hicut_jax --policy greedy --steps 3
+
+End-to-end control → serving loop on a virtual device mesh (edge server →
+mesh device): each dynamic time step the
+:class:`repro.core.api.GraphEdgeController` perceives the perturbed user
+topology, partitions it, offloads users to servers and accounts the exact
+system cost (Eqs. 12–14); the resulting :class:`~repro.core.api.Decision`
+bridges via ``to_partition_plan()`` into
+:func:`repro.gnn.distributed.distributed_gcn_forward`, whose output is
+checked against the single-device ``gcn_apply`` oracle every step.
+
+NOTE: sets XLA_FLAGS before importing jax — run as a script/module entry,
+not via import-then-call.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def _parse_args() -> argparse.Namespace:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--users", type=int, default=48)
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="graph-state capacity (0 → users + 8)")
+    ap.add_argument("--features", type=int, default=32)
+    ap.add_argument("--hidden", type=int, default=16)
+    ap.add_argument("--classes", type=int, default=5)
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--partitioner", default="hicut_jax")
+    ap.add_argument("--policy", default="greedy")
+    ap.add_argument("--change-rate", type=float, default=0.2)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args()
+
+
+def main() -> None:
+    args = _parse_args()
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import costs
+    from repro.core.api import GraphEdgeController
+    from repro.core.dynamic_graph import perturb_scenario, random_scenario
+    from repro.gnn.distributed import distributed_gcn_forward
+    from repro.gnn.layers import gcn_apply, gcn_init
+
+    rng = np.random.default_rng(args.seed)
+    capacity = args.capacity or args.users + 8
+    state = random_scenario(rng, capacity, args.users, 3 * args.users)
+    net = costs.default_network(rng, capacity, args.devices)
+    controller = GraphEdgeController(net=net, policy=args.policy,
+                                     partitioner=args.partitioner)
+    params = gcn_init(jax.random.PRNGKey(args.seed),
+                      [args.features, args.hidden, args.classes])
+    mesh = Mesh(np.array(jax.devices()[:args.devices]), ("servers",))
+
+    print(f"serving {args.steps} dynamic steps: {args.users} users, "
+          f"{args.devices} edge servers, {args.partitioner} + {args.policy}")
+    for t in range(args.steps):
+        if t:
+            state = perturb_scenario(rng, state, args.change_rate)
+        decision = controller.step(state)
+        plan = decision.to_partition_plan(args.devices)
+        x = rng.normal(size=(capacity, args.features)).astype(np.float32)
+        out = distributed_gcn_forward(mesh, "servers", plan, params, x)
+        oracle = np.asarray(gcn_apply(params, jnp.asarray(x), state.adj,
+                                      state.mask))
+        served = np.nonzero(np.asarray(state.mask) > 0)[0]
+        err = float(np.abs(out[served] - oracle[served]).max())
+        print(f"t={t}: C={float(decision.cost.c):8.3f}  "
+              f"subgraphs={decision.partition.num_subgraphs:3d}  "
+              f"halo={plan.halo:3d} rows/device  "
+              f"collective={plan.bytes_per_aggregate(args.hidden):8d} B  "
+              f"|serve - oracle|max={err:.2e}")
+        assert err < 1e-4, "distributed serve diverged from the oracle"
+    print(f"partition cache: {controller.cache_hits} hits, "
+          f"{controller.cache_misses} misses")
+
+
+if __name__ == "__main__":
+    main()

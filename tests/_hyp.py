@@ -1,0 +1,62 @@
+"""Hypothesis import shim for the property-based tests.
+
+``requirements-dev.txt`` declares the real dependency; when hypothesis is
+installed the import below re-exports it untouched. On bare installs (no
+dev extras) we fall back to a small deterministic sampler so that
+``pytest -q`` still collects and runs every module: each ``@given`` test
+executes up to 10 examples drawn from a fixed-seed generator instead of
+hypothesis' shrinking search. The fallback supports exactly the strategy
+surface this suite uses (``st.integers``, ``st.sampled_from``).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _FALLBACK_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _FALLBACK_MAX_EXAMPLES, **_ignored):
+        def deco(wrapper):
+            wrapper._max_examples = max_examples
+            return wrapper
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps: pytest must not see the
+            # generated-argument signature and treat the names as fixtures)
+            def wrapper():
+                rng = np.random.default_rng(0)
+                n = min(getattr(wrapper, "_max_examples",
+                                _FALLBACK_MAX_EXAMPLES),
+                        _FALLBACK_MAX_EXAMPLES)
+                for _ in range(n):
+                    fn(*(s.sample(rng) for s in strategies))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

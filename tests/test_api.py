@@ -1,0 +1,278 @@
+"""Control-plane API (repro.core.api): registries, partitioner parity,
+controller ↔ legacy-facade equivalence, and the decision → serving bridge."""
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, costs
+from repro.core.api import (Assignment, Decision, GraphEdgeController,
+                            Partition, available_offload_policies,
+                            available_partitioners, get_offload_policy,
+                            get_partitioner)
+from repro.core.dynamic_graph import (move_users, random_scenario,
+                                      remove_users)
+from repro.core.offload.drlgo import (DRLGOTrainer, DRLGOTrainerConfig,
+                                      hicut_partition)
+from repro.core.offload.env import OffloadEnv
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def small(seed=0, n=16, users=12, m=3, e=24):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, n, users, e)
+    net = costs.default_network(rng, n, m)
+    return state, net
+
+
+# -- registries --------------------------------------------------------------
+
+def test_registry_contents():
+    assert set(available_partitioners()) >= {"hicut_jax", "hicut_ref",
+                                             "mincut", "none"}
+    assert set(available_offload_policies()) >= {"drlgo", "ppo", "greedy",
+                                                 "random", "local"}
+
+
+def test_registry_lookup_by_name():
+    for name in ("hicut_jax", "hicut_ref", "none"):
+        p = get_partitioner(name)
+        assert p.name == name
+    assert get_partitioner("mincut", num_parts=3).num_parts == 3
+    for name in ("greedy", "local"):
+        assert get_offload_policy(name).name == name
+    assert get_offload_policy("random", seed=7).seed == 7
+
+
+def test_unknown_names_raise_with_options():
+    with pytest.raises(ValueError, match="hicut_jax"):
+        get_partitioner("does-not-exist")
+    with pytest.raises(ValueError, match="greedy"):
+        get_offload_policy("does-not-exist")
+
+
+def test_registration_decorator():
+    @api.register_partitioner("_test_constant")
+    class _Const:
+        name = "_test_constant"
+
+        def __call__(self, state):
+            sub = np.where(np.asarray(state.mask) > 0, 0, -1).astype(np.int64)
+            return Partition(sub, self.name)
+    try:
+        state, _ = small()
+        part = get_partitioner("_test_constant")(state)
+        assert part.num_subgraphs == 1
+    finally:
+        del api._PARTITIONERS["_test_constant"]
+
+
+# -- partitioners ------------------------------------------------------------
+
+def _canonical(labels):
+    """Relabel subgraph ids by first appearance (for relabel-invariance)."""
+    out = np.full(len(labels), -1, np.int64)
+    seen = {}
+    for i, v in enumerate(labels):
+        if v >= 0:
+            out[i] = seen.setdefault(v, len(seen))
+    return out
+
+
+def test_hicut_jax_matches_ref_through_interface():
+    for seed in range(5):
+        state, _ = small(seed=seed, n=20, users=14 + seed, e=30)
+        ref = get_partitioner("hicut_ref")(state)
+        jx = get_partitioner("hicut_jax")(state)
+        np.testing.assert_array_equal(_canonical(ref.subgraph),
+                                      _canonical(jx.subgraph))
+        assert ref.cut_metrics["cross_edges"] == jx.cut_metrics["cross_edges"]
+
+
+def test_partitioners_respect_mask():
+    state, _ = small(users=10, n=16)
+    active = np.asarray(state.mask) > 0
+    for name in ("hicut_jax", "hicut_ref", "mincut", "none"):
+        part = get_partitioner(name)(state)
+        assert (part.subgraph[~active] == -1).all(), name
+        assert (part.subgraph[active] >= 0).all(), name
+
+
+def test_none_partitioner_isolates_vertices():
+    state, _ = small()
+    part = get_partitioner("none")(state)
+    act = part.subgraph[part.subgraph >= 0]
+    assert len(np.unique(act)) == len(act)
+    assert part.cut_metrics["cut_fraction"] == 1.0 or \
+        part.cut_metrics["total_edges"] == 0
+
+
+def test_partition_device_assignment():
+    state, _ = small()
+    part = get_partitioner("hicut_ref")(state)
+    dev = part.to_device_assignment(2)
+    active = np.asarray(state.mask) > 0
+    assert ((dev[active] >= 0) & (dev[active] < 2)).all()
+    assert (dev[~active] == -1).all()
+
+
+# -- controller --------------------------------------------------------------
+
+def test_controller_step_valid_assignment():
+    state, net = small()
+    active = np.asarray(state.mask) > 0
+    for policy in ("greedy", "random", "local"):
+        d = GraphEdgeController(net=net, policy=policy).step(state)
+        assert ((d.servers[active] >= 0) & (d.servers[active] < 3)).all()
+        assert (d.servers[~active] == -1).all()
+        # reported cost is exactly the Eqs. 12–14 batch model
+        w = costs.assignment_onehot(jnp.asarray(d.servers), 3)
+        sc = costs.system_cost(net, state, w)
+        assert np.isclose(float(d.cost.c), float(sc.c))
+
+
+def test_controller_matches_legacy_offload_path():
+    """GraphEdgeController.step == the old GraphEdge.offload wiring
+    (hicut_ref + deterministic MADDPG rollout) on a fixed seed."""
+    cfg = DRLGOTrainerConfig(capacity=16, n_users=12, n_assoc=24,
+                             n_servers=3, episodes=1, seed=3)
+    tr = DRLGOTrainer(cfg)
+    state = tr.scenario
+    # legacy path, reconstructed verbatim from the pre-API facade
+    sub = hicut_partition(state)
+    env = OffloadEnv(tr.net, state, sub, zeta_sp=cfg.zeta_sp,
+                     cost_scale=cfg.cost_scale)
+    legacy = tr.run_episode(env, explore=False, learn=False)
+    legacy_assign = env.assign.copy()
+
+    ctrl = GraphEdgeController(net=tr.net, policy="drlgo",
+                               policy_kwargs={"trainer": tr},
+                               partitioner="hicut_ref",
+                               zeta_sp=cfg.zeta_sp,
+                               cost_scale=cfg.cost_scale)
+    d = ctrl.step(state)
+    np.testing.assert_array_equal(d.servers, legacy_assign)
+    assert np.isclose(float(d.cost.c), legacy["system_cost"])
+    assert np.isclose(d.assignment.reward, legacy["reward"])
+
+
+def test_graphedge_shim_deprecated_but_equivalent():
+    from repro.core.system import GraphEdge
+    cfg = DRLGOTrainerConfig(capacity=12, n_users=9, n_assoc=15,
+                             n_servers=3, episodes=1, seed=1)
+    tr = DRLGOTrainer(cfg)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        system = GraphEdge(tr)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    res = system.offload(tr.scenario)
+    ctrl = GraphEdgeController(net=tr.net, policy=tr.as_policy(),
+                               partitioner="hicut_ref",
+                               zeta_sp=cfg.zeta_sp, cost_scale=cfg.cost_scale)
+    d = ctrl.step(tr.scenario)
+    np.testing.assert_array_equal(res["assignment"], d.servers)
+    assert np.isclose(res["system_cost"], float(d.cost.c))
+    assert res["num_subgraphs"] == d.partition.num_subgraphs
+
+
+def test_partition_cache_hits_on_pure_mobility():
+    state, net = small()
+    ctrl = GraphEdgeController(net=net, policy="greedy")
+    ctrl.step(state)
+    ctrl.step(state)
+    moved = move_users(state, state.pos + 10.0)
+    ctrl.step(moved)                               # same topology → hit
+    assert (ctrl.cache_hits, ctrl.cache_misses) == (2, 1)
+    drop = np.zeros(state.capacity, np.float32)
+    drop[0] = 1.0
+    ctrl.step(remove_users(state, jnp.asarray(drop)))   # topology changed
+    assert ctrl.cache_misses == 2
+
+
+def test_rollout_drives_dynamic_model():
+    state, net = small()
+    ctrl = GraphEdgeController(net=net, policy="greedy")
+    decisions = ctrl.rollout(state, 4, np.random.default_rng(0))
+    assert len(decisions) == 4
+    for d in decisions:
+        assert isinstance(d, Decision)
+        assert np.isfinite(float(d.cost.c))
+    # perturbation must actually change the scenario between steps
+    assert any(not np.array_equal(np.asarray(decisions[i].state.adj),
+                                  np.asarray(decisions[i + 1].state.adj))
+               for i in range(3))
+
+
+def test_trainer_consumes_partitioner_registry():
+    cfg = DRLGOTrainerConfig(capacity=12, n_users=9, n_assoc=15,
+                             n_servers=3, partitioner="none")
+    tr = DRLGOTrainer(cfg)
+    env = tr.make_env(tr.scenario)
+    assert env.use_subgraph_reward is False
+    act = env.subgraph[np.asarray(tr.scenario.mask) > 0]
+    assert len(np.unique(act)) == len(act)       # every vertex isolated
+    legacy = DRLGOTrainerConfig(use_hicut=False)
+    assert legacy.partitioner_name == "none"
+    assert DRLGOTrainerConfig().partitioner_name == "hicut_ref"
+
+
+# -- decision → serving bridge ----------------------------------------------
+
+def test_to_partition_plan_roundtrip_single_device():
+    """Controller decision → plan → distributed forward == gcn_apply."""
+    from jax.sharding import Mesh
+    from repro.gnn.distributed import distributed_gcn_forward
+    from repro.gnn.layers import gcn_apply, gcn_init
+    rng = np.random.default_rng(0)
+    state = random_scenario(rng, 12, 12, 20)      # fully active
+    net = costs.default_network(rng, 12, 3)
+    d = GraphEdgeController(net=net, policy="greedy").step(state)
+    plan = d.to_partition_plan(num_devices=1)
+    params = gcn_init(jax.random.PRNGKey(0), [8, 6, 4])
+    x = rng.normal(size=(12, 8)).astype(np.float32)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("servers",))
+    out = distributed_gcn_forward(mesh, "servers", plan, params, x)
+    oracle = np.asarray(gcn_apply(params, jnp.asarray(x), state.adj,
+                                  state.mask))
+    np.testing.assert_allclose(out, oracle[:out.shape[0]], atol=1e-5)
+
+
+@pytest.mark.slow
+def test_to_partition_plan_roundtrip_multidevice():
+    """Same round-trip on a real 4-device mesh (subprocess, virtual CPUs)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import costs
+        from repro.core.api import GraphEdgeController
+        from repro.core.dynamic_graph import random_scenario
+        from repro.gnn.distributed import distributed_gcn_forward
+        from repro.gnn.layers import gcn_apply, gcn_init
+        rng = np.random.default_rng(1)
+        state = random_scenario(rng, 40, 40, 120)
+        net = costs.default_network(rng, 40, 4)
+        ctrl = GraphEdgeController(net=net, policy="greedy",
+                                   partitioner="hicut_jax")
+        plan = ctrl.step(state).to_partition_plan(4)
+        params = gcn_init(jax.random.PRNGKey(0), [16, 8, 5])
+        x = rng.normal(size=(40, 16)).astype(np.float32)
+        mesh = Mesh(np.array(jax.devices()), ("servers",))
+        out = distributed_gcn_forward(mesh, "servers", plan, params, x)
+        oracle = np.asarray(gcn_apply(params, jnp.asarray(x), state.adj,
+                                      state.mask))
+        print("ERR", float(np.abs(out - oracle[:out.shape[0]]).max()))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=420, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert float(out.stdout.split("ERR")[1]) < 1e-4
