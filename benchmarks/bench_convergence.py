@@ -1,51 +1,146 @@
-"""Paper Fig. 11: training-reward convergence, DRLGO vs PTOM.
+"""Paper Fig. 11: training-reward convergence, DRLGO vs PTOM — plus the
+``--batch`` throughput axis for the vmapped environment.
 
 Both learners train on the §6.4 dynamic protocol (20% change rate); the
 negated system cost is the reward. Emits the reward trace (down-sampled)
 and the final-window mean/std — DRLGO should converge higher and flatter.
+
+With ``--batch B > 1`` both learners collect B vmapped episodes per update
+round through :class:`~repro.core.offload.batched_env.BatchedOffloadEnv`;
+the ``*_eps_per_sec`` rows report steady-state training throughput — the
+timer starts after jit compilation is warm and the replay warmup threshold
+is reached, so both batch settings measure the same collect + update
+regime. ``--batch 8`` should report ≥ 4× the episodes/sec of ``--batch 1``;
+because absolute eps/sec numbers jitter with ambient CPU load, a
+``--batch B > 1`` run *also* times the B=1 path in the same process and
+emits the noise-immune ``fig11_drlgo_batch_speedup`` row.
+
+    PYTHONPATH=src python benchmarks/bench_convergence.py --batch 8
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from benchmarks.common import emit
-from repro.core.offload.drlgo import DRLGOTrainer, DRLGOTrainerConfig
-from repro.core.offload.env import OBS_DIM
-from repro.core.offload.ppo import PPOConfig, PTOMAgent
+
+def _train_ptom(tr, ptom, episodes: int, batch: int, change_rate: float):
+    """PTOM episodes on the trainer's perturbation protocol → rewards."""
+    from repro.core.dynamic_graph import perturb_scenario
+    rng = np.random.default_rng(1)
+    rewards = []
+    if batch > 1:
+        scenarios = [tr.scenario] * batch
+        while len(rewards) < episodes:
+            scenarios = [perturb_scenario(rng, s, change_rate)
+                         for s in scenarios]
+            benv = tr.make_batched_env(scenarios)
+            rewards.extend(o["reward"] for o in ptom.run_batch(benv))
+    else:
+        sc = tr.scenario
+        for _ in range(episodes):
+            sc = perturb_scenario(rng, sc, change_rate)
+            rewards.append(ptom.run_episode(tr.make_env(sc))["reward"])
+    return np.array(rewards)     # all trained episodes (may exceed request)
 
 
-def run(quick: bool = True) -> None:
+def _warmed_trainer(cfg):
+    """Trainer past every cold-start cliff: jit round, update compile, and
+    the replay-warmup threshold — so subsequent ``train()`` calls measure
+    the same steady collect + update regime at every batch size."""
+    from repro.core.offload.drlgo import DRLGOTrainer
+
+    tr = DRLGOTrainer(cfg)
+    round_eps = max(cfg.batch_envs, 1)
+    tr.train(episodes=round_eps)
+    tr.warm_update_jit()
+    while len(tr.buffer) < max(tr.mcfg.batch_size, cfg.warmup_steps):
+        tr.train(episodes=round_eps)
+    return tr
+
+
+def run(quick: bool = True, batch: int = 1) -> None:
+    from dataclasses import replace
+
+    from benchmarks.common import emit
+    from repro.core.offload.drlgo import DRLGOTrainerConfig
+    from repro.core.offload.env import OBS_DIM
+    from repro.core.offload.ppo import PPOConfig, PTOMAgent
+
     episodes = 40 if quick else 500
     n_users = 24 if quick else 300
     cfg = DRLGOTrainerConfig(capacity=n_users + 8, n_users=n_users,
                              n_assoc=3 * n_users, episodes=episodes,
-                             warmup_steps=256, cost_scale=1.0)
-    tr = DRLGOTrainer(cfg)
-    hist = tr.train()
-    rewards = np.array([h["reward"] for h in hist])
+                             warmup_steps=256, cost_scale=1.0,
+                             batch_envs=batch)
+    tr = _warmed_trainer(cfg)
+    # With batch > 1 a B=1 reference is timed in the SAME process with the
+    # timing slices interleaved, so ambient CPU-load swings hit both legs
+    # equally and the speedup row stays meaningful on a noisy machine.
+    ref = _warmed_trainer(replace(cfg, batch_envs=1)) if batch > 1 else None
+    dt_main = dt_ref = 0.0
+    h_main = len(tr.history)
+    h_ref = len(ref.history) if ref is not None else 0
+    while len(tr.history) - h_main < episodes:
+        # batched rounds may overshoot a chunk; count actual episodes below
+        n = min(max(batch, 4), episodes - (len(tr.history) - h_main))
+        t0 = time.perf_counter()
+        tr.train(episodes=n)
+        dt_main += time.perf_counter() - t0
+        if ref is not None:
+            t0 = time.perf_counter()
+            ref.train(episodes=n)
+            dt_ref += time.perf_counter() - t0
+    n_main = len(tr.history) - h_main
+    eps_per_sec = n_main / dt_main
+    emit("fig11_drlgo_eps_per_sec", eps_per_sec,
+         f"us_per_episode={1e6 / eps_per_sec:.1f};batch={batch};"
+         f"episodes={n_main}")
+    if ref is not None:
+        n_ref = len(ref.history) - h_ref
+        ref_eps = n_ref / dt_ref
+        emit("fig11_drlgo_eps_per_sec_b1ref", ref_eps,
+             f"us_per_episode={1e6 / ref_eps:.1f};batch=1")
+        emit("fig11_drlgo_batch_speedup", eps_per_sec / ref_eps,
+             f"batch={batch};vs=1;same_process=1;interleaved=1")
+    # Fig. 11 reward trace covers the full from-scratch history (the warm
+    # region is excluded from the timer above, not from training)
+    rewards = np.array([h["reward"] for h in tr.history])
 
     ptom = PTOMAgent(PPOConfig(state_dim=cfg.n_servers * OBS_DIM,
                                n_actions=cfg.n_servers))
-    ptom_rewards = []
-    from repro.core.dynamic_graph import perturb_scenario
-    rng = np.random.default_rng(1)
-    sc = tr.scenario
-    for _ in range(episodes):
-        sc = perturb_scenario(rng, sc, cfg.change_rate)
-        env = tr.make_env(sc)
-        ptom_rewards.append(ptom.run_episode(env)["reward"])
-    ptom_rewards = np.array(ptom_rewards)
+    _train_ptom(tr, ptom, max(batch, 1), batch, cfg.change_rate)  # jit warm
+    t0 = time.perf_counter()
+    ptom_rewards = _train_ptom(tr, ptom, episodes, batch, cfg.change_rate)
+    dt = time.perf_counter() - t0
+    emit("fig11_ptom_eps_per_sec", len(ptom_rewards) / dt,
+         f"us_per_episode={dt / len(ptom_rewards) * 1e6:.1f};batch={batch};"
+         f"episodes={len(ptom_rewards)}")
 
     w = max(4, episodes // 8)
     for name, r in (("drlgo", rewards), ("ptom", ptom_rewards)):
         emit(f"fig11_{name}_final", 0.0,
              f"mean={r[-w:].mean():.2f};std={r[-w:].std():.2f};"
              f"first={r[:w].mean():.2f}")
-        stride = max(1, episodes // 10)
+        stride = max(1, len(r) // 10)
         trace = ";".join(f"{v:.1f}" for v in r[::stride])
         emit(f"fig11_{name}_trace", 0.0, trace)
 
 
 if __name__ == "__main__":
+    import argparse
+    import os
     import sys
-    run(quick="--full" not in sys.argv)
+
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_root, os.path.join(_root, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale axes (300 users, 500 episodes)")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="vmapped episodes per update round (B)")
+    args = ap.parse_args()
+    run(quick=not args.full, batch=args.batch)

@@ -18,6 +18,11 @@ This module exposes that loop behind three swappable pieces:
   Partitions are cached across steps whose topology (mask + adjacency) is
   unchanged — pure mobility steps never re-run the cut.
 
+For training-scale workloads, :meth:`GraphEdgeController.make_batched_env`
+stacks B scenarios into one vmapped
+:class:`~repro.core.offload.batched_env.BatchedOffloadEnv` with the
+controller's partitioner and reward constants (DESIGN.md §3).
+
 A :class:`Decision` bridges directly into serving:
 ``decision.to_partition_plan(P)`` feeds
 :func:`repro.gnn.distributed.make_partition_plan` →
@@ -38,6 +43,7 @@ import numpy as np
 from repro.core import costs
 from repro.core.dynamic_graph import GraphState, perturb_scenario
 from repro.core.hicut import cut_metrics, hicut_jax, hicut_ref
+from repro.core.offload.batched_env import BatchedOffloadEnv
 from repro.core.offload.env import OffloadEnv
 
 
@@ -380,6 +386,20 @@ class GraphEdgeController:
                           zeta_sp=self.zeta_sp,
                           use_subgraph_reward=bool(self.use_subgraph_reward),
                           cost_scale=self.cost_scale)
+
+    def make_batched_env(self, states: list[GraphState],
+                         partitions: list[Partition] | None = None
+                         ) -> BatchedOffloadEnv:
+        """B scenarios (same capacity) → one vmapped
+        :class:`~repro.core.offload.batched_env.BatchedOffloadEnv` with this
+        controller's partitioner and reward constants. Used by the batched
+        DRLGO/PTOM trainers; see DESIGN.md "Batched environment"."""
+        if partitions is None:
+            partitions = [self.partition(s) for s in states]
+        return BatchedOffloadEnv.from_scenarios(
+            self.net, states, partitions, gnn=self.gnn, zeta_sp=self.zeta_sp,
+            use_subgraph_reward=bool(self.use_subgraph_reward),
+            cost_scale=self.cost_scale)
 
     # -- one control step ----------------------------------------------------
     def step(self, state: GraphState) -> Decision:

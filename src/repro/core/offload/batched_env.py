@@ -1,0 +1,329 @@
+"""Batched, vmappable MAMDP offloading environment (paper §5.1–5.2).
+
+The legacy :class:`~repro.core.offload.env.OffloadEnv` walks users with
+per-step numpy; reproducing the paper's Fig. 7–9 sweeps (hundreds of users,
+many dynamic scenarios) makes that walk the training wall-clock bottleneck.
+This module ports the marginal-cost arithmetic (Eqs. 4–11, 22–25) to
+fixed-shape ``jnp`` pure functions over two pytrees so ``B`` independent
+episodes/scenarios step together under ``jax.vmap`` (and whole rollouts run
+under one ``lax.scan``/``jit``):
+
+* :class:`EnvScene` — everything that is constant within one episode: the
+  masked graph layout, per-user/server rates and distances, the HiCut
+  subgraph ids, the fixed visit order, and the reward constants. Built for
+  all B scenarios in one jitted vmapped pass by
+  :meth:`BatchedOffloadEnv.from_scenarios`.
+* :class:`EnvState` — the per-step mutable state: step counter, the partial
+  user→server assignment, server loads, and the full-server flags.
+
+Padding/masking convention (documented in DESIGN.md "Batched environment"):
+every episode is rolled for exactly ``N = capacity`` steps. Steps with
+``t >= num_steps`` (the scenario's active-user count) are no-ops — the
+assignment, loads and flags freeze and the reward is zero — so shapes stay
+static under ``jit``/``vmap`` while scenarios with different user counts
+share one batch. Trainers drop the padded transitions via the per-step
+``valid`` flag before replay.
+
+Numerical parity with the numpy env is pinned by
+``tests/test_batched_env.py``: with ``B = 1``, the same action sequence
+produces the same server choices/assignment (exactly) and the same rewards
+and observations (to float32 tolerance).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import costs
+from repro.core.costs import KB, EdgeNetwork, GNNCostParams
+from repro.core.dynamic_graph import GraphState
+from repro.core.offload.env import OBS_DIM
+
+
+class EnvScene(NamedTuple):
+    """Per-episode constants (all ``jnp``; batchable with a leading B axis)."""
+    mask: jnp.ndarray       # [N] f32 {0,1} — active users
+    pos: jnp.ndarray        # [N, 2] f32
+    adj: jnp.ndarray        # [N, N] f32 {0,1}
+    kb: jnp.ndarray         # [N] f32 — task size X_i (kilobit)
+    deg: jnp.ndarray        # [N] f32 — active degree |N_i|
+    subgraph: jnp.ndarray   # [N] i32 — HiCut subgraph id (−1 inactive)
+    order: jnp.ndarray      # [N] i32 — visit order, actives first by subgraph
+    num_steps: jnp.ndarray  # [] i32 — #active users = #real steps
+    rate_up: jnp.ndarray    # [N, M] f32 — uplink rate R_{i,m} (Eq. 3)
+    rate_sv: jnp.ndarray    # [M, M] f32 — server rate R_{k,l} (Eq. 6)
+    f_k: jnp.ndarray        # [M] f32
+    caps: jnp.ndarray       # [M] f32
+    d_im: jnp.ndarray       # [N, M] f32
+    gnn_vec: jnp.ndarray    # [N] f32 — user share of Eqs. (10)–(11)
+    zeta_im: jnp.ndarray    # [] f32
+    zeta_kl: jnp.ndarray    # [] f32
+    zeta_sp: jnp.ndarray    # [] f32 — ζ in Eq. (25)
+    sub_w: jnp.ndarray      # [] f32 — 1.0 ⇒ R_sp on, 0.0 ⇒ DRL-only ablation
+    cost_scale: jnp.ndarray  # [] f32 — reward normalizer
+
+
+class EnvState(NamedTuple):
+    """Per-step episode state (the pytree carried through ``lax.scan``)."""
+    t: jnp.ndarray          # [] i32 — step counter (runs to N, not num_steps)
+    assign: jnp.ndarray     # [N] i32 — user → server (−1 unplaced)
+    load: jnp.ndarray       # [M] f32 — users hosted per server
+    done_m: jnp.ndarray     # [M] bool — server full
+
+
+def _scene_core(net: EdgeNetwork, state: GraphState, subgraph: jnp.ndarray,
+                zeta_sp, sub_w, cost_scale,
+                gnn: GNNCostParams) -> EnvScene:
+    """Pure scene construction (vmappable over (state, subgraph))."""
+    mask = jnp.asarray(state.mask, jnp.float32)
+    adj = jnp.asarray(state.adj, jnp.float32)
+    deg = (adj.sum(1) * mask).astype(jnp.float32)
+    active = mask > 0
+    # actives first, stable by subgraph id — matches the numpy env's
+    # nonzero(mask) + stable argsort over subgraph[order]
+    big = jnp.int32(2 ** 30)
+    order = jnp.argsort(jnp.where(active, subgraph, big),
+                        stable=True).astype(jnp.int32)
+    sizes = [s * KB for s in gnn.layer_sizes_kb]
+    gnn_a = gnn.mu * sum(sizes[:-1])
+    gnn_b = sum(gnn.theta * sizes[k - 1] * sizes[k] / gnn.update_norm_bits
+                + gnn.phi * sizes[k] for k in range(1, len(sizes)))
+    d_im = jnp.linalg.norm(
+        jnp.asarray(state.pos)[:, None, :] - net.server_pos[None], axis=-1)
+    return EnvScene(
+        mask=mask, pos=jnp.asarray(state.pos, jnp.float32), adj=adj,
+        kb=jnp.asarray(state.task_kb, jnp.float32), deg=deg,
+        subgraph=subgraph, order=order,
+        num_steps=active.sum().astype(jnp.int32),
+        rate_up=costs.uplink_rate(net, state).astype(jnp.float32),
+        rate_sv=costs.server_rate(net).astype(jnp.float32),
+        f_k=jnp.asarray(net.f_k, jnp.float32),
+        caps=jnp.asarray(net.capacity, jnp.float32),
+        d_im=d_im.astype(jnp.float32),
+        gnn_vec=(gnn_a * deg + gnn_b).astype(jnp.float32),
+        zeta_im=jnp.float32(net.zeta_im), zeta_kl=jnp.float32(net.zeta_kl),
+        zeta_sp=jnp.asarray(zeta_sp, jnp.float32),
+        sub_w=jnp.asarray(sub_w, jnp.float32),
+        cost_scale=jnp.asarray(cost_scale, jnp.float32))
+
+
+def _raw_subgraph(subgraph) -> np.ndarray:
+    """``api.Partition`` or array → [N] int32 subgraph ids."""
+    if hasattr(subgraph, "subgraph"):
+        subgraph = subgraph.subgraph
+    return np.asarray(subgraph, np.int32)
+
+
+@partial(jax.jit, static_argnames=("gnn",))
+def _make_scenes(net: EdgeNetwork, states: GraphState, subgraphs, zeta_sp,
+                 sub_w, cost_scale, gnn: GNNCostParams) -> EnvScene:
+    """All B scenes in one jitted vmapped pass (scalars broadcast)."""
+    return jax.vmap(
+        lambda st, sg: _scene_core(net, st, sg, zeta_sp, sub_w, cost_scale,
+                                   gnn))(states, subgraphs)
+
+
+def stack_states(states: Sequence[GraphState]) -> GraphState:
+    """[B] GraphStates (same capacity) → batched GraphState pytree."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+# ---------------------------------------------------------------------------
+# pure single-episode functions (vmap across a stacked EnvScene for batches)
+# ---------------------------------------------------------------------------
+
+def env_reset(scene: EnvScene) -> EnvState:
+    n = scene.mask.shape[0]
+    m = scene.f_k.shape[0]
+    return EnvState(t=jnp.int32(0),
+                    assign=jnp.full((n,), -1, jnp.int32),
+                    load=jnp.zeros((m,), jnp.float32),
+                    done_m=jnp.zeros((m,), bool))
+
+
+def _current_user(scene: EnvScene, es: EnvState) -> jnp.ndarray:
+    idx = jnp.clip(es.t, 0, jnp.maximum(scene.num_steps - 1, 0))
+    return scene.order[idx]
+
+
+def marginal_cost(scene: EnvScene, es: EnvState, i, k) -> jnp.ndarray:
+    """ΔC of hosting user i on server k given the partial assignment
+    (Eqs. 4, 5, 7, 8, 9 deltas + the user's GNN-energy share, Eqs. 10–11)."""
+    m = scene.f_k.shape[0]
+    bits = scene.kb[i] * KB
+    t_up = bits / jnp.maximum(scene.rate_up[i, k], 1.0)
+    i_up = bits * scene.zeta_im
+    t_com = bits / scene.f_k[k]
+    placed = (es.assign >= 0) & (es.assign != k)
+    w = scene.adj[i] * placed
+    pair = bits + scene.kb * KB
+    rate = scene.rate_sv[k, jnp.clip(es.assign, 0, m - 1)]
+    t_tran = jnp.sum(w * pair / jnp.maximum(rate, 1.0))
+    i_com = jnp.sum(w * scene.zeta_kl * pair)
+    return t_up + i_up + t_com + t_tran + i_com + scene.gnn_vec[i]
+
+
+def _subgraph_onehot(scene: EnvScene, es: EnvState, i):
+    """[N, M] bool: already-placed members of i's subgraph, by server."""
+    m = scene.f_k.shape[0]
+    members = (scene.subgraph == scene.subgraph[i]) & (es.assign >= 0)
+    onehot = (es.assign[:, None] == jnp.arange(m)[None, :]) & members[:, None]
+    return members, onehot
+
+
+def r_sp(scene: EnvScene, es: EnvState, i, k) -> jnp.ndarray:
+    """Eq. (25): ζ·N_s/N_c for user i's subgraph after placing it on k."""
+    members, onehot = _subgraph_onehot(scene, es, i)
+    used = jnp.any(onehot, axis=0).at[k].set(True)
+    return scene.zeta_sp * used.sum() / (members.sum() + 1)
+
+
+def env_obs(scene: EnvScene, es: EnvState) -> jnp.ndarray:
+    """[M, OBS_DIM] local observations O_m (Eq. 20, fixed featurization —
+    the per-dimension layout is identical to ``OffloadEnv._obs``)."""
+    m = scene.f_k.shape[0]
+    i = _current_user(scene, es)
+    members, onehot = _subgraph_onehot(scene, es, i)
+    n_c = jnp.maximum(members.sum(), 1)
+    ones = jnp.ones((m,), jnp.float32)
+    caps = jnp.maximum(scene.caps, 1.0)
+    cols = [
+        ones * scene.pos[i, 0] / 2000.0,
+        ones * scene.pos[i, 1] / 2000.0,
+        ones * scene.deg[i] / 16.0,
+        ones * scene.kb[i] / 1500.0,
+        scene.d_im[i] / 2000.0,
+        scene.rate_up[i] / 1e9,
+        (scene.caps - es.load) / caps,
+        scene.f_k / 10e9,
+        onehot.sum(0) / n_c,
+        ones * jnp.any(onehot, axis=0).sum() / m,
+        es.load / caps,
+        ones * es.t / jnp.maximum(scene.num_steps, 1),
+    ]
+    return jnp.stack(cols, axis=-1).astype(jnp.float32)
+
+
+def env_step(scene: EnvScene, es: EnvState, actions: jnp.ndarray):
+    """One MAMDP step (Eqs. 22–25). ``actions``: [M, 2] in [0,1].
+
+    Returns ``(EnvState, obs [M, OBS_DIM], rewards [M], done [], k [])``.
+    Steps past ``num_steps`` are masked no-ops (see module docstring)."""
+    m = scene.f_k.shape[0]
+    i = _current_user(scene, es)
+    score = actions[:, 0] - actions[:, 1]
+    eligible = ~es.done_m
+    eligible = jnp.where(eligible.any(), eligible,
+                         es.load == es.load.min())   # all full: least-loaded
+    k = jnp.argmax(jnp.where(eligible, score, -jnp.inf)).astype(jnp.int32)
+    dc = marginal_cost(scene, es, i, k)
+    valid = es.t < scene.num_steps
+    reward_k = -(dc / scene.cost_scale + scene.sub_w * r_sp(scene, es, i, k))
+    rewards = jnp.zeros((m,), jnp.float32).at[k].set(
+        reward_k * valid.astype(jnp.float32))        # Eq. (24)
+    assign = jnp.where(valid, es.assign.at[i].set(k), es.assign)
+    load = jnp.where(valid, es.load.at[k].add(1.0), es.load)
+    done_m = jnp.where(valid, load >= scene.caps, es.done_m)
+    t = es.t + 1
+    done = t >= scene.num_steps
+    done_m = done_m | done
+    es = EnvState(t, assign, load, done_m)
+    return es, env_obs(scene, es), rewards, done, k
+
+
+# ---------------------------------------------------------------------------
+# batched wrappers
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _reset_batch(scene: EnvScene):
+    es = jax.vmap(env_reset)(scene)
+    return es, jax.vmap(env_obs)(scene, es)
+
+
+@jax.jit
+def _step_batch(scene: EnvScene, es: EnvState, actions: jnp.ndarray):
+    return jax.vmap(env_step)(scene, es, actions)
+
+
+@partial(jax.jit, static_argnames=("gnn",))
+def _final_batch(net: EdgeNetwork, states: GraphState, assign: jnp.ndarray,
+                 gnn: GNNCostParams):
+    m = net.server_pos.shape[0]
+
+    def one(state, a):
+        w = costs.assignment_onehot(a, m)
+        return costs.system_cost(net, state, w, gnn)
+
+    return jax.vmap(one)(states, assign)
+
+
+@dataclass
+class BatchedOffloadEnv:
+    """B independent offloading episodes stepping together under vmap/jit.
+
+    Functional counterpart of the numpy :class:`OffloadEnv` — state lives in
+    the :class:`EnvState` pytree returned by :meth:`reset`, not on the
+    object, so whole rollouts can run inside ``lax.scan`` (see
+    ``repro.core.offload.drlgo.collect_batch``). Build with
+    :meth:`from_scenarios`, or from a single legacy env with
+    ``OffloadEnv.as_batched()``.
+    """
+    net: EdgeNetwork
+    states: GraphState            # stacked [B, ...] scenario pytree
+    scene: EnvScene               # stacked [B, ...] episode constants
+    gnn: GNNCostParams = field(default_factory=GNNCostParams)
+
+    @classmethod
+    def from_scenarios(cls, net: EdgeNetwork,
+                       scenarios: Sequence[GraphState], subgraphs: Sequence,
+                       gnn: GNNCostParams = GNNCostParams(),
+                       zeta_sp: float = 1.0,
+                       use_subgraph_reward: bool = True,
+                       cost_scale: float = 1.0) -> "BatchedOffloadEnv":
+        """Build from B (scenario, subgraph/Partition) pairs sharing one
+        :class:`EdgeNetwork` and capacity."""
+        states = stack_states(list(scenarios))
+        subs = jnp.asarray(np.stack([_raw_subgraph(g) for g in subgraphs]))
+        scene = _make_scenes(net, states, subs, zeta_sp,
+                             1.0 if use_subgraph_reward else 0.0,
+                             cost_scale, gnn)
+        return cls(net, states, scene, gnn=gnn)
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.scene.mask.shape[0])
+
+    @property
+    def m(self) -> int:
+        return int(self.scene.f_k.shape[-1])
+
+    @property
+    def capacity(self) -> int:
+        return int(self.scene.mask.shape[-1])
+
+    @property
+    def num_steps(self) -> np.ndarray:
+        """[B] active-user count per episode (#real, non-padded steps)."""
+        return np.asarray(self.scene.num_steps)
+
+    def reset(self):
+        """→ ``(EnvState, obs [B, M, OBS_DIM], global_state [B, M·OBS_DIM])``."""
+        es, obs = _reset_batch(self.scene)
+        return es, obs, obs.reshape(self.batch_size, -1)
+
+    def step(self, es: EnvState, actions):
+        """actions ``[B, M, 2]`` → ``(EnvState, obs, global_state,
+        rewards [B, M], done [B], k [B])``."""
+        es, obs, rew, done, k = _step_batch(self.scene, es,
+                                            jnp.asarray(actions))
+        return es, obs, obs.reshape(self.batch_size, -1), rew, done, k
+
+    def final_costs(self, es: EnvState) -> costs.SystemCost:
+        """Exact Eqs. (12)–(14) accounting per episode (leaves are [B, ...])."""
+        return _final_batch(self.net, self.states, es.assign, self.gnn)

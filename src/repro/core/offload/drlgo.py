@@ -4,10 +4,20 @@ Each episode: dynamically perturb the scenario (20% change rate by default,
 §6.4), rebuild the dynamic graph layout, run HiCut (Algorithm 1) to get
 G_sub, then roll the MAMDP: every step all agents act, one user is placed,
 transitions go to the replay buffer, and every agent takes a gradient step.
+
+With ``DRLGOTrainerConfig.batch_envs = B > 1`` the trainer instead rolls B
+independently-perturbed scenarios per update round through the vmapped
+:class:`~repro.core.offload.batched_env.BatchedOffloadEnv` — the whole
+collection loop runs in one ``lax.scan`` under jit (:func:`collect_batch`),
+padded transitions are dropped, and the round then takes the same number of
+gradient steps Algorithm 2 takes for *one* episode (one per env step), so
+wall-clock per episode drops ≈ B× (see ``benchmarks/bench_convergence.py
+--batch``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +28,8 @@ from repro.core.api import get_partitioner, state_edges
 from repro.core.dynamic_graph import GraphState, random_scenario, \
     perturb_scenario
 from repro.core.hicut import hicut_ref
+from repro.core.offload.batched_env import (BatchedOffloadEnv, env_obs,
+                                            env_reset, env_step)
 from repro.core.offload.env import ACT_DIM, OBS_DIM, OffloadEnv
 from repro.core.offload.maddpg import (MADDPGConfig, ReplayBuffer,
                                        init_maddpg, maddpg_update,
@@ -31,6 +43,37 @@ def hicut_partition(state: GraphState) -> np.ndarray:
     ``get_partitioner("hicut_ref")(state).subgraph``."""
     mask = np.asarray(state.mask) > 0
     return hicut_ref(state.capacity, state_edges(state), active=mask)
+
+
+@partial(jax.jit, static_argnames=("mcfg", "explore"))
+def collect_batch(mcfg: MADDPGConfig, st, scene, key, explore: bool = True):
+    """Roll B episodes to completion in one jitted ``lax.scan``.
+
+    Every scan step all B×M actors act (current MADDPG params ``st``) and
+    every episode places one user. Scans the full capacity-N step range;
+    steps past an episode's ``num_steps`` are masked no-ops (``valid``).
+
+    Returns ``(EnvState, traj)`` with ``traj = (obs, acts, rew, obs2, done,
+    valid)``, each leaf ``[N, B, ...]`` (time-major).
+    """
+    b, n = scene.mask.shape
+    es0 = jax.vmap(env_reset)(scene)
+    obs0 = jax.vmap(env_obs)(scene, es0)
+
+    def one_step(carry, _):
+        es, obs, key = carry
+        key, k = jax.random.split(key)
+        keys = jax.random.split(k, b)
+        acts = jax.vmap(
+            lambda o, kk: select_actions(mcfg, st, o, kk, explore=explore)
+        )(obs, keys)
+        valid = es.t < scene.num_steps
+        es, obs2, rew, done, _ = jax.vmap(env_step)(scene, es, acts)
+        return (es, obs2, key), (obs, acts, rew, obs2, done, valid)
+
+    (es, _, _), traj = jax.lax.scan(one_step, (es0, obs0, key), None,
+                                    length=n)
+    return es, traj
 
 
 @dataclass
@@ -47,6 +90,7 @@ class DRLGOTrainerConfig:
     cost_scale: float = 20.0      # reward normalizer
     updates_per_step: int = 1
     warmup_steps: int = 512
+    batch_envs: int = 1           # B vmapped episodes per update round
     seed: int = 0
     initial_scenario: GraphState | None = None   # e.g. dataset-derived
 
@@ -79,6 +123,10 @@ class DRLGOTrainer:
         self.net = costs.default_network(self.rng, self.cfg.capacity,
                                          self.cfg.n_servers)
         self.partitioner = get_partitioner(self.cfg.partitioner_name)
+        # B scenario streams, perturbed independently each round; stream 0
+        # is the legacy self.scenario (kept in sync for evaluate()).
+        self.scenarios: list[GraphState] = \
+            [self.scenario] * max(1, self.cfg.batch_envs)
         self.history: list[dict] = []
 
     def make_env(self, scenario: GraphState) -> OffloadEnv:
@@ -87,6 +135,30 @@ class DRLGOTrainer:
                           zeta_sp=self.cfg.zeta_sp,
                           use_subgraph_reward=self.partitioner.name != "none",
                           cost_scale=self.cfg.cost_scale)
+
+    def make_batched_env(self, scenarios: list[GraphState]
+                         ) -> BatchedOffloadEnv:
+        """Partition each scenario and stack into a vmappable batched env."""
+        parts = [self.partitioner(s) for s in scenarios]
+        return BatchedOffloadEnv.from_scenarios(
+            self.net, scenarios, parts, zeta_sp=self.cfg.zeta_sp,
+            use_subgraph_reward=self.partitioner.name != "none",
+            cost_scale=self.cfg.cost_scale)
+
+    def warm_update_jit(self) -> None:
+        """Compile ``maddpg_update`` for this trainer's shapes without
+        touching params or buffer (benchmarks call this so the one-time
+        jit cost stays out of their timed region)."""
+        m = self.mcfg
+        z = lambda *s: jnp.zeros(s, jnp.float32)
+        dummy = (z(m.batch_size, m.n_agents, m.obs_dim),
+                 z(m.batch_size, m.n_agents * m.obs_dim),
+                 z(m.batch_size, m.n_agents, m.act_dim),
+                 z(m.batch_size, m.n_agents),
+                 z(m.batch_size, m.n_agents, m.obs_dim),
+                 z(m.batch_size, m.n_agents * m.obs_dim),
+                 z(m.batch_size))
+        maddpg_update(self.mcfg, self.state, dummy)    # result discarded
 
     def as_policy(self):
         """This trainer's (current) actors as a registry-compatible policy."""
@@ -121,21 +193,82 @@ class DRLGOTrainer:
                 "cross_bits": float(final.cross_bits.sum()),
                 **{k: float(v) for k, v in losses.items()}}
 
+    def run_batch(self, benv: BatchedOffloadEnv, explore: bool = True,
+                  learn: bool = True) -> list[dict]:
+        """Collect B vmapped episodes in one scan, replay only the valid
+        (non-padded) transitions, and take Algorithm 2's per-step gradient
+        updates once per *round* (shared across the B episodes)."""
+        self.key, k = jax.random.split(self.key)
+        es, traj = collect_batch(self.mcfg, self.state, benv.scene, k,
+                                 explore=explore)
+        obs, acts, rew, obs2, done, valid = (np.asarray(x) for x in traj)
+        t, b = valid.shape
+        ep_reward = rew.sum(axis=(0, 2))               # [B], Eq. (23)
+        losses = {}
+        if learn:
+            sel = valid.reshape(-1)
+            flat = lambda x: x.reshape(t * b, *x.shape[2:])[sel]
+            fobs, fobs2 = flat(obs), flat(obs2)
+            self.buffer.add_batch(fobs, fobs.reshape(len(fobs), -1),
+                                  flat(acts), flat(rew), fobs2,
+                                  fobs2.reshape(len(fobs2), -1),
+                                  flat(done.astype(np.float32)))
+            if len(self.buffer) >= max(self.mcfg.batch_size,
+                                       self.cfg.warmup_steps):
+                n_upd = self.cfg.updates_per_step * int(valid.sum(0).max())
+                for _ in range(n_upd):
+                    batch = tuple(jnp.asarray(x) for x in self.buffer.sample())
+                    self.state, losses = maddpg_update(self.mcfg, self.state,
+                                                       batch)
+        final = benv.final_costs(es)
+        loss_f = {k_: float(v) for k_, v in losses.items()}
+        return [{"reward": float(ep_reward[i]),
+                 "system_cost": float(final.c[i]),
+                 "t_all": float(final.t_all[i]),
+                 "i_all": float(final.i_all[i]),
+                 "cross_bits": float(np.asarray(final.cross_bits[i]).sum()),
+                 **loss_f}
+                for i in range(b)]
+
     def train(self, episodes: int | None = None, log_every: int = 0,
               ) -> list[dict]:
         episodes = episodes or self.cfg.episodes
-        for e in range(episodes):
+        if self.cfg.batch_envs > 1:
+            return self._train_batched(episodes, log_every)
+        for _ in range(episodes):
             # Algorithm 2 line 8: dynamically change env, rebuild G via
             # the dynamic graph model, run Algorithm 1 for G_sub
             self.scenario = perturb_scenario(self.rng, self.scenario,
                                              self.cfg.change_rate)
+            self.scenarios[0] = self.scenario
             env = self.make_env(self.scenario)
             stats = self.run_episode(env)
-            stats["episode"] = e
+            stats["episode"] = len(self.history)
+            e = stats["episode"]
             self.history.append(stats)
             if log_every and (e + 1) % log_every == 0:
                 print(f"ep {e+1:4d} reward {stats['reward']:10.2f} "
                       f"cost {stats['system_cost']:10.2f}")
+        return self.history
+
+    def _train_batched(self, episodes: int, log_every: int = 0) -> list[dict]:
+        """Vectorized training: ⌈episodes/B⌉ rounds of B episodes each."""
+        b = self.cfg.batch_envs
+        target = len(self.history) + episodes
+        while len(self.history) < target:
+            self.scenarios = [perturb_scenario(self.rng, s,
+                                               self.cfg.change_rate)
+                              for s in self.scenarios]
+            self.scenario = self.scenarios[0]
+            benv = self.make_batched_env(self.scenarios)
+            for stats in self.run_batch(benv):
+                stats["episode"] = len(self.history)
+                self.history.append(stats)
+            e = len(self.history)
+            if log_every and (e // b) % max(1, log_every // b) == 0:
+                last = self.history[-1]
+                print(f"ep {e:4d} reward {last['reward']:10.2f} "
+                      f"cost {last['system_cost']:10.2f}")
         return self.history
 
     def evaluate(self, scenario: GraphState, repeats: int = 1) -> dict:

@@ -21,6 +21,13 @@ documented in DESIGN.md ("Observation featurization").
 
 All incremental cost arithmetic reuses the constants and formulas of
 ``repro.core.costs`` (checked against the batch ``system_cost`` in tests).
+
+This class is the B=1 numpy-in/numpy-out reference implementation — the
+controller and the non-learning baselines drive it directly. For training
+at paper scale, :mod:`repro.core.offload.batched_env` ports the same
+arithmetic to fixed-shape ``jnp`` pure functions vmappable over B episodes
+(:meth:`OffloadEnv.as_batched` bridges a single env across); the parity
+tests in ``tests/test_batched_env.py`` pin the two trajectories together.
 """
 from __future__ import annotations
 
@@ -168,6 +175,17 @@ class OffloadEnv:
         if done:
             self.done_m[:] = True
         return self._obs(), self._global_state(), rewards, done, k
+
+    # -- batched bridge ------------------------------------------------------
+    def as_batched(self):
+        """This env's scenario as a B=1 :class:`BatchedOffloadEnv` (same
+        net, subgraph, reward constants — trajectories match to f32)."""
+        from repro.core.offload.batched_env import BatchedOffloadEnv
+        return BatchedOffloadEnv.from_scenarios(
+            self.net, [self.state], [self.subgraph], gnn=self.gnn,
+            zeta_sp=self.zeta_sp,
+            use_subgraph_reward=self.use_subgraph_reward,
+            cost_scale=self.cost_scale)
 
     # -- final accounting ----------------------------------------------------
     def final_cost(self) -> costs.SystemCost:

@@ -110,6 +110,18 @@ class ReplayBuffer:
         self.ptr = (self.ptr + 1) % self.cfg.buffer_size
         self.full = self.full or self.ptr == 0
 
+    def add_batch(self, obs, state, acts, rew, obs2, state2, done):
+        """Vectorized :meth:`add` of K transitions (e.g. one batched-env
+        round's valid steps), with ring-buffer wraparound."""
+        k = obs.shape[0]
+        size = self.cfg.buffer_size
+        idx = (self.ptr + np.arange(k)) % size
+        self.obs[idx], self.state[idx], self.acts[idx] = obs, state, acts
+        self.rew[idx], self.obs2[idx], self.state2[idx] = rew, obs2, state2
+        self.done[idx] = np.asarray(done, np.float32)
+        self.full = self.full or self.ptr + k >= size
+        self.ptr = int((self.ptr + k) % size)
+
     def __len__(self):
         return self.cfg.buffer_size if self.full else self.ptr
 

@@ -3,6 +3,12 @@
 Single agent, categorical policy over the M servers for the current user,
 clipped-surrogate PPO with GAE. Same network budget as DRLGO (3×64) and no
 HiCut / subgraph constraint, exactly as the paper describes the baseline.
+
+:meth:`PTOMAgent.run_batch` rolls B vmapped episodes per update through a
+:class:`~repro.core.offload.batched_env.BatchedOffloadEnv` (one jitted
+``lax.scan``), computes GAE per episode over the valid (non-padded) steps,
+and updates on the pooled trajectory — the batched counterpart of
+:meth:`PTOMAgent.run_episode`.
 """
 from __future__ import annotations
 
@@ -16,6 +22,8 @@ import numpy as np
 
 from repro.nnlib.core import mlp_init, mlp_apply
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.core.offload.batched_env import (BatchedOffloadEnv, env_obs,
+                                            env_reset, env_step)
 from repro.core.offload.env import OffloadEnv
 
 
@@ -55,28 +63,71 @@ def policy_logits(params, s):
 
 @partial(jax.jit, static_argnames=("cfg",))
 def ppo_update(cfg: PPOConfig, st: PPOState, batch):
-    s, a, logp_old, adv, ret = batch
+    """One clipped-surrogate epoch. ``batch`` is ``(s, a, logp, adv, ret)``
+    or ``(s, a, logp, adv, ret, w)`` with per-sample weights ``w`` — the
+    batched rollout pads to a fixed size with ``w = 0`` so jit compiles
+    once instead of retracing on every pooled-trajectory length."""
+    if len(batch) == 6:
+        s, a, logp_old, adv, ret, w = batch
+    else:
+        s, a, logp_old, adv, ret = batch
+        w = jnp.ones_like(adv)
     opt = AdamWConfig(lr=cfg.lr)
+    wsum = jnp.maximum(w.sum(), 1.0)
+    wmean = lambda x: (x * w).sum() / wsum
 
     def ploss(p):
         logits = policy_logits(p, s)
         logp = jax.nn.log_softmax(logits)[jnp.arange(a.shape[0]), a]
         ratio = jnp.exp(logp - logp_old)
         clipped = jnp.clip(ratio, 1 - cfg.clip, 1 + cfg.clip)
-        ent = -jnp.mean(jnp.sum(jax.nn.softmax(logits) *
-                                jax.nn.log_softmax(logits), -1))
-        return -jnp.mean(jnp.minimum(ratio * adv, clipped * adv)) \
+        ent = wmean(-jnp.sum(jax.nn.softmax(logits) *
+                             jax.nn.log_softmax(logits), -1))
+        return -wmean(jnp.minimum(ratio * adv, clipped * adv)) \
             - cfg.entropy_coef * ent
 
     def vloss(p):
         v = mlp_apply(p, s)[:, 0]
-        return jnp.mean((v - ret) ** 2)
+        return wmean((v - ret) ** 2)
 
     pl, gp = jax.value_and_grad(ploss)(st.policy)
     vl, gv = jax.value_and_grad(vloss)(st.value)
     newp, op = adamw_update(opt, gp, st.opt_p, st.policy)
     newv, ov = adamw_update(opt, gv, st.opt_v, st.value)
     return PPOState(newp, newv, op, ov), {"policy_loss": pl, "value_loss": vl}
+
+
+@partial(jax.jit, static_argnames=("explore",))
+def ptom_collect(st: PPOState, scene, key, explore: bool = True):
+    """B PTOM episodes in one jitted scan over the batched env.
+
+    Returns ``(EnvState, (s, a, logp, r, v, valid))``, leaves ``[N, B, ...]``
+    time-major; ``r`` is the summed per-step reward (Eq. 23 terms)."""
+    b, n = scene.mask.shape
+    m = scene.f_k.shape[-1]
+    es0 = jax.vmap(env_reset)(scene)
+    s0 = jax.vmap(env_obs)(scene, es0).reshape(b, -1)
+
+    def one_step(carry, _):
+        es, s, key = carry
+        logits = policy_logits(st.policy, s)                     # [B, M]
+        v = mlp_apply(st.value, s)[:, 0]
+        key, k = jax.random.split(key)
+        if explore:
+            a = jax.random.categorical(k, logits)
+        else:
+            a = jnp.argmax(logits, axis=-1)
+        logp = jax.nn.log_softmax(logits)[jnp.arange(b), a]
+        # PTOM picks the server directly: one-hot "yes" to server a
+        acts = jnp.zeros((b, m, 2), jnp.float32).at[:, :, 1].set(1.0)
+        acts = acts.at[jnp.arange(b), a, 0].set(2.0)
+        valid = es.t < scene.num_steps
+        es, obs2, rew, _, _ = jax.vmap(env_step)(scene, es, acts)
+        out = (s, a, logp, rew.sum(-1), v, valid)
+        return (es, obs2.reshape(b, -1), key), out
+
+    (es, _, _), traj = jax.lax.scan(one_step, (es0, s0, key), None, length=n)
+    return es, traj
 
 
 @dataclass
@@ -122,16 +173,70 @@ class PTOMAgent:
                 "t_all": float(final.t_all), "i_all": float(final.i_all),
                 "cross_bits": float(final.cross_bits.sum())}
 
-    def _update(self, traj):
-        r = np.array(traj["r"], np.float32)
-        v = np.array(traj["v"] + [0.0], np.float32)
+    def run_batch(self, benv: BatchedOffloadEnv, learn: bool = True,
+                  explore: bool = True) -> list[dict]:
+        """Roll B vmapped episodes, GAE per episode over valid steps, one
+        pooled PPO update. Returns one stats dict per episode."""
+        self.key, k = jax.random.split(self.key)
+        es, traj = ptom_collect(self.state, benv.scene, k, explore=explore)
+        s, a, logp, r, v, valid = (np.asarray(x) for x in traj)
+        n_steps = valid.sum(0)                          # [B] valid prefix
+        if learn:
+            ss, aa, lp, adv, ret = [], [], [], [], []
+            for b in range(s.shape[1]):                 # GAE per episode
+                n = int(n_steps[b])
+                if n == 0:
+                    continue
+                adv_b, ret_b = self._gae(r[:n, b], v[:n, b])
+                ss.append(s[:n, b]); aa.append(a[:n, b]); lp.append(logp[:n, b])
+                adv.append(adv_b); ret.append(ret_b)
+            if ss:
+                adv = np.concatenate(adv)
+                adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+                # pad the pooled batch to the fixed size T×B (weight 0) so
+                # ppo_update compiles once, not per pooled length
+                k, full = len(adv), s.shape[0] * s.shape[1]
+                pad = lambda x, d: np.concatenate(
+                    [x, np.zeros((full - k, *x.shape[1:]), d)]) \
+                    if full > k else x[:full]
+                w = pad(np.ones(k, np.float32), np.float32)
+                batch = (jnp.asarray(pad(np.concatenate(ss).astype(
+                             np.float32), np.float32)),
+                         jnp.asarray(pad(np.concatenate(aa).astype(
+                             np.int32), np.int32)),
+                         jnp.asarray(pad(np.concatenate(lp).astype(
+                             np.float32), np.float32)),
+                         jnp.asarray(pad(adv.astype(np.float32),
+                                         np.float32)),
+                         jnp.asarray(pad(np.concatenate(ret).astype(
+                             np.float32), np.float32)),
+                         jnp.asarray(w))
+                for _ in range(self.cfg.epochs):
+                    self.state, _ = ppo_update(self.cfg, self.state, batch)
+        final = benv.final_costs(es)
+        return [{"reward": float(r[:, b].sum()),
+                 "system_cost": float(final.c[b]),
+                 "t_all": float(final.t_all[b]),
+                 "i_all": float(final.i_all[b]),
+                 "cross_bits": float(np.asarray(final.cross_bits[b]).sum())}
+                for b in range(s.shape[1])]
+
+    def _gae(self, r: np.ndarray, v: np.ndarray
+             ) -> tuple[np.ndarray, np.ndarray]:
+        """One episode's GAE advantages + returns (terminal bootstrap 0)."""
+        r = np.asarray(r, np.float32)
+        v = np.append(np.asarray(v, np.float32), 0.0)
         adv = np.zeros_like(r)
         gae = 0.0
         for t in reversed(range(len(r))):
             delta = r[t] + self.cfg.gamma * v[t + 1] - v[t]
             gae = delta + self.cfg.gamma * self.cfg.lam * gae
             adv[t] = gae
-        ret = adv + v[:-1]
+        return adv, adv + v[:-1]
+
+    def _update(self, traj):
+        adv, ret = self._gae(np.array(traj["r"], np.float32),
+                             np.array(traj["v"], np.float32))
         adv = (adv - adv.mean()) / (adv.std() + 1e-8)
         s = jnp.asarray(np.array(traj["s"], np.float32))
         a = jnp.asarray(np.array(traj["a"], np.int32))

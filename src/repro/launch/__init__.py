@@ -1,0 +1,28 @@
+"""Launchers and deployment tooling — which entry point do I want?
+
+Two families live here: the **GraphEdge control plane** (the paper
+reproduction: controller → distributed GNN serving) and the **LM framework
+lane** (the transformer stack this repo also carries: training/serving
+launchers plus the multi-pod dry-run and roofline tooling).
+
+Runnable entry points (``PYTHONPATH=src python -m repro.launch.<name>``):
+
+| entry point | lane | what it does |
+|---|---|---|
+| ``serve_gnn``  | GraphEdge | end-to-end control → distributed GCN serving on a virtual mesh; checks every step against the single-device oracle |
+| ``train``      | LM        | training loop for a registry arch (``--reduced`` CPU dims or ``--production`` mesh shardings) |
+| ``serve``      | LM        | prefill + autoregressive decode (optionally ``--kv-int8``) |
+| ``dryrun``     | LM        | lower + compile one (arch × shape × mesh) combo; memory/FLOPs analysis |
+| ``dryrun_all`` | LM        | sweep every combo in subprocesses, JSON per run |
+| ``report``     | LM        | render the dry-run/roofline tables from the sweep JSON |
+
+Libraries (imported, not run): ``mesh`` (production mesh shapes),
+``shapes`` (assigned input shapes / abstract input specs), ``shardings``
+(FSDP+TP+SP GSPMD rules), ``roofline`` (compute/memory/collective terms
+from compiled HLO).
+
+DRLGO (offloading-policy) training is not a launcher — use
+``examples/train_drlgo.py`` (``--batch B`` for the vmapped batched
+environment) or drive :class:`repro.core.offload.drlgo.DRLGOTrainer`
+directly. See README.md for the repo-level map.
+"""

@@ -10,7 +10,8 @@ Usage:
 
 Prints ``compiled.memory_analysis()`` (proves the per-device footprint
 fits 16 GB HBM) and ``cost_analysis()`` FLOPs/bytes, plus the §Roofline
-terms derived from the compiled HLO.
+terms derived from the compiled HLO. (Entry-point orientation: see the
+``repro.launch`` package docstring.)
 """
 from __future__ import annotations
 

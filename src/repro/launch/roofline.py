@@ -15,6 +15,9 @@ CAVEAT (EXPERIMENTS.md §Perf): the CPU backend legalizes bf16 → f32 during
 compilation, so bytes for bf16 traffic are counted at f32 width — terms
 are ~2× pessimistic in absolute value for bf16 quantities; relative
 comparisons across combos remain valid.
+
+Library module (no CLI) — consumed by ``repro.launch.dryrun``; see the
+``repro.launch`` package docstring for the entry-point table.
 """
 from __future__ import annotations
 

@@ -8,7 +8,8 @@ teacher-forced prefill fills the cache token by token, then greedy decode
 generates. ``--kv-int8`` turns on the §Perf-3 quantized cache.
 
 For the GraphEdge control-plane serving path (controller decision →
-partition plan → distributed GNN inference) see ``repro.launch.serve_gnn``.
+partition plan → distributed GNN inference) see ``repro.launch.serve_gnn``;
+the ``repro.launch`` package docstring has the full entry-point table.
 """
 from __future__ import annotations
 

@@ -13,7 +13,8 @@ bridges via ``to_partition_plan()`` into
 checked against the single-device ``gcn_apply`` oracle every step.
 
 NOTE: sets XLA_FLAGS before importing jax — run as a script/module entry,
-not via import-then-call.
+not via import-then-call. (Entry-point orientation: see the
+``repro.launch`` package docstring.)
 """
 from __future__ import annotations
 

@@ -8,6 +8,10 @@ CPU container with ``--reduced`` dims; on a real TPU slice the identical
 code path runs the full config under ``make_production_mesh()`` with the
 FSDP+TP+SP shardings (``--production`` wires them; it requires the real
 device count and is exercised offline by the dry-run).
+
+This is the *LM framework* trainer (see the ``repro.launch`` package
+docstring for the entry-point table). GraphEdge's DRLGO offloading policy
+is trained by ``examples/train_drlgo.py`` instead.
 """
 from __future__ import annotations
 

@@ -1,0 +1,32 @@
+"""Docs stay runnable: fenced snippets compile, documented CLI flags exist.
+
+Mirrors the CI docs lane (``tools/check_docs.py``) inside tier-1 so a
+README/DESIGN edit that drifts from the actual CLIs fails locally too.
+"""
+import importlib.util
+import pathlib
+
+
+def _load_checker():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", root / "tools" / "check_docs.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_doc_snippets_and_cli_flags_exist():
+    checker = _load_checker()
+    errors = checker.collect_errors()
+    assert not errors, "\n".join(errors)
+
+
+def test_checker_catches_bad_flag(tmp_path, monkeypatch):
+    checker = _load_checker()
+    errors = []
+    checker.check_command(
+        "README.md",
+        "PYTHONPATH=src python examples/train_drlgo.py --no-such-flag",
+        errors)
+    assert errors and "--no-such-flag" in errors[0]

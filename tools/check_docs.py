@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Docs lane: keep README.md / DESIGN.md snippets honest.
+
+Two checks, stdlib-only (no jax/numpy needed, so CI can run it without
+installing the stack):
+
+* every fenced ``python`` block must at least *compile* (syntax-valid
+  against the current tree);
+* every ``python ...`` command in sh/console fences that targets a file or
+  ``-m`` module inside this repo must point at an existing file, and every
+  ``--flag`` it passes must appear verbatim in that file's source (i.e. in
+  an ``add_argument`` call) — so quickstart commands cannot drift from the
+  CLIs.
+
+Run directly (exit 1 on problems) or via ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import shlex
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = ("README.md", "DESIGN.md")
+FENCE = re.compile(r"```([\w+-]*)[ \t]*\n(.*?)```", re.S)
+SHELL_LANGS = {"", "sh", "bash", "shell", "console", "text"}
+
+
+def _module_path(module: str) -> pathlib.Path:
+    return ROOT / "src" / (module.replace(".", "/") + ".py")
+
+
+def iter_commands(body: str):
+    """Yield logical command lines that invoke python."""
+    body = body.replace("\\\n", " ")
+    for line in body.splitlines():
+        line = line.strip()
+        if line.startswith("$"):
+            line = line[1:].strip()
+        if line and "python" in line:
+            yield line
+
+
+def check_command(doc: str, line: str, errors: list[str]) -> None:
+    try:
+        toks = shlex.split(line)
+    except ValueError:
+        return
+    while toks and "=" in toks[0] and not toks[0].startswith("-"):
+        toks.pop(0)                       # drop env assignments
+    if not toks or not toks[0].startswith("python"):
+        return
+    toks.pop(0)
+    if toks and toks[0] == "-m":
+        toks.pop(0)
+        if not toks:
+            return
+        module = toks.pop(0)
+        if not module.startswith("repro"):
+            return                        # pytest, pip, ... — out of scope
+        target = _module_path(module)
+    elif toks and toks[0].endswith(".py"):
+        target = ROOT / toks.pop(0)
+    else:
+        return
+    if not target.exists():
+        errors.append(f"{doc}: {line!r} → no such file {target}")
+        return
+    src = target.read_text()
+    for tok in toks:
+        if not tok.startswith("--"):
+            continue
+        flag = tok.split("=", 1)[0]
+        if f'"{flag}"' not in src and f"'{flag}'" not in src:
+            errors.append(f"{doc}: {line!r} → flag {flag} not found in "
+                          f"{target.relative_to(ROOT)}")
+
+
+def collect_errors() -> list[str]:
+    errors: list[str] = []
+    for doc in DOCS:
+        path = ROOT / doc
+        if not path.exists():
+            errors.append(f"{doc}: missing")
+            continue
+        for lang, body in FENCE.findall(path.read_text()):
+            if lang == "python":
+                try:
+                    compile(body, f"{doc}:<fenced python>", "exec")
+                except SyntaxError as exc:
+                    errors.append(f"{doc}: python block does not compile: "
+                                  f"{exc}")
+            elif lang.lower() in SHELL_LANGS:
+                for line in iter_commands(body):
+                    check_command(doc, line, errors)
+    return errors
+
+
+def main() -> int:
+    errors = collect_errors()
+    for err in errors:
+        print(f"ERROR: {err}", file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {', '.join(DOCS)}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
