@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, timeit_with_result
 from repro.core.hicut import cut_metrics, hicut_ref
 from repro.core.mincut_baseline import pairwise_mincut_partition
 from repro.data.graphs import random_graph
@@ -31,13 +31,12 @@ def run(quick: bool = True) -> None:
         for n, e in cases:
             g = random_graph(n, e, seed=int(rng.integers(1 << 30)))
             weights = rng.integers(1, 101, g.num_edges)
-            t_hicut = timeit(lambda: hicut_ref(n, g.edges), repeats=1)
-            a_hicut = hicut_ref(n, g.edges)
+            t_hicut, a_hicut = timeit_with_result(
+                lambda: hicut_ref(n, g.edges), repeats=1)
             m_hicut = cut_metrics(n, g.edges, a_hicut)
-            t_mincut = timeit(lambda: pairwise_mincut_partition(
-                n, g.edges, weights, servers), repeats=1)
-            a_mincut = pairwise_mincut_partition(n, g.edges, weights,
-                                                 servers)
+            t_mincut, a_mincut = timeit_with_result(
+                lambda: pairwise_mincut_partition(n, g.edges, weights,
+                                                  servers), repeats=1)
             m_mincut = cut_metrics(n, g.edges, a_mincut)
             emit(f"fig6_hicut_{label}_v{n}_e{e}", t_hicut,
                  f"cut_frac={m_hicut['cut_fraction']:.3f};"

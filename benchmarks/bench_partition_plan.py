@@ -1,0 +1,118 @@
+"""Sparse vs dense partition-plan construction + aggregation forward
+(ROADMAP "sharded/large-graph serving"; the serving half of Fig. 6's axis).
+
+Times ``make_partition_plan_sparse`` (vectorized O(E) edge-list path)
+against ``make_partition_plan_dense_reference`` (the original O(N²)
+triple-loop builder) on random graphs, plus the matching aggregation
+forward: the sparse gather op vs the dense masked-SpMM op on the same
+normalized Â. The dense builder/aggregate are skipped above
+``DENSE_MAX_VERTICES`` — at the 20k/800k ``--full`` tip only the sparse
+path runs (that is the point: no N×N anywhere).
+
+Besides the usual CSV rows, writes **machine-readable
+``BENCH_partition.json``** (one record per case: timings, speedups, plan
+stats, parity error) so the perf trajectory is tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+
+from benchmarks.common import emit, timeit_with_result
+from repro.core.hicut import hicut_ref
+from repro.data.graphs import random_graph
+from repro.gnn.distributed import (make_partition_plan_dense_reference,
+                                   make_partition_plan_sparse)
+from repro.gnn.layers import gcn_norm_sparse
+from repro.kernels.gnn_aggregate.ops import (gather_aggregate,
+                                             normalized_aggregate)
+
+DENSE_MAX_VERTICES = 5_000
+FEATURE_DIM = 64
+OUT_JSON = "BENCH_partition.json"
+
+
+def run(quick: bool = True) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    if quick:
+        cases = [(1_000, 10_000), (2_000, 20_000), (5_000, 50_000)]
+        devices = 4
+    else:  # paper Fig. 6 sparse axis up to 20k vertices
+        cases = [(1_000, 10_000), (5_000, 200_000), (10_000, 400_000),
+                 (20_000, 800_000)]
+        devices = 8
+    rng = np.random.default_rng(0)
+    records = []
+    for n, e in cases:
+        g = random_graph(n, e, seed=int(rng.integers(1 << 30)))
+        assign = hicut_ref(n, g.edges) % devices
+        t_sparse, plan_s = timeit_with_result(
+            lambda: make_partition_plan_sparse(g.edges, assign, devices,
+                                               n=n), repeats=1)
+        rec = {"n": n, "e": g.num_edges, "devices": devices,
+               "t_plan_sparse_us": t_sparse, "halo": plan_s.halo,
+               "block": plan_s.block, "max_degree": plan_s.max_degree,
+               "bytes_per_aggregate": plan_s.bytes_per_aggregate(
+                   FEATURE_DIM)}
+        emit(f"partition_plan_sparse_v{n}_e{g.num_edges}", t_sparse,
+             f"halo={plan_s.halo};max_deg={plan_s.max_degree}")
+
+        if n <= DENSE_MAX_VERTICES:
+            adj = g.adjacency()
+            t_dense, plan_d = timeit_with_result(
+                lambda: make_partition_plan_dense_reference(adj, assign,
+                                                            devices),
+                repeats=1)
+            parity = float(np.abs(plan_s.dense_adj_ext()
+                                  - plan_d.adj_ext).max())
+            rec.update(t_plan_dense_us=t_dense,
+                       plan_speedup=t_dense / max(t_sparse, 1e-9),
+                       plan_parity_err=parity)
+            emit(f"partition_plan_dense_v{n}_e{g.num_edges}", t_dense,
+                 f"sparse_speedup={rec['plan_speedup']:.1f}x;"
+                 f"parity_err={parity:.1e}")
+
+        # aggregation forward on the same normalized operator (jitted +
+        # warmed so both paths are timed compiled, not eager dispatch)
+        idx, val, dinv = gcn_norm_sparse(g.edges, n)
+        x = jnp.asarray(rng.normal(size=(n, FEATURE_DIM)).astype(
+            np.float32))
+        agg_s = jax.jit(lambda xx: gather_aggregate(jnp.asarray(idx),
+                                                    jnp.asarray(val), xx,
+                                                    dinv, dinv))
+        y_s = np.asarray(agg_s(x))          # warmup/compile
+        t_agg_s, _ = timeit_with_result(
+            lambda: agg_s(x).block_until_ready(), repeats=3)
+        rec["t_agg_sparse_us"] = t_agg_s
+        emit(f"sparse_aggregate_v{n}_e{g.num_edges}", t_agg_s,
+             f"k={idx.shape[1]}")
+        if n <= DENSE_MAX_VERTICES:
+            a_hat = jnp.asarray(g.adjacency() + np.eye(n, dtype=np.float32))
+            agg_d = jax.jit(lambda xx: normalized_aggregate(a_hat, xx,
+                                                            dinv, dinv))
+            y_d = np.asarray(agg_d(x))      # warmup/compile
+            t_agg_d, _ = timeit_with_result(
+                lambda: agg_d(x).block_until_ready(), repeats=3)
+            agg_err = float(np.abs(y_s - y_d).max())
+            rec.update(t_agg_dense_us=t_agg_d,
+                       agg_speedup=t_agg_d / max(t_agg_s, 1e-9),
+                       agg_max_err=agg_err)
+            emit(f"dense_aggregate_v{n}_e{g.num_edges}", t_agg_d,
+                 f"sparse_speedup={rec['agg_speedup']:.1f}x;"
+                 f"max_err={agg_err:.1e}")
+        records.append(rec)
+
+    out = pathlib.Path(OUT_JSON)
+    out.write_text(json.dumps({"bench": "partition_plan",
+                               "quick": quick, "records": records},
+                              indent=2) + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv)

@@ -10,10 +10,16 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def timeit(fn, repeats: int = 3) -> float:
     """Median wall time of fn() in microseconds."""
-    times = []
+    return timeit_with_result(fn, repeats)[0]
+
+
+def timeit_with_result(fn, repeats: int = 3):
+    """(median wall time of fn() in µs, result of the last timed call) —
+    so benchmarks that also inspect the output never run fn() twice."""
+    times, result = [], None
     for _ in range(repeats):
         t0 = time.perf_counter()
-        fn()
+        result = fn()
         times.append((time.perf_counter() - t0) * 1e6)
     times.sort()
-    return times[len(times) // 2]
+    return times[len(times) // 2], result

@@ -34,6 +34,7 @@ Registries are plain dicts of factories; third-party strategies plug in with
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Protocol, runtime_checkable
 
@@ -48,8 +49,30 @@ from repro.core.offload.env import OffloadEnv
 
 
 def state_edges(state: GraphState) -> np.ndarray:
-    """Upper-triangular edge list [(i, j)] of the (masked) layout G(t)."""
-    return np.transpose(np.nonzero(np.triu(np.asarray(state.adj))))
+    """Upper-triangular edge list [(i, j)] of the (masked) layout G(t).
+
+    One pass over the dense layout (GraphState stores adj dense), but no
+    N×N temporary — the old ``np.triu`` copy doubled peak memory."""
+    i, j = np.nonzero(np.asarray(state.adj))
+    keep = i < j
+    return np.stack([i[keep], j[keep]], axis=1)
+
+
+def topology_key(state: GraphState) -> str:
+    """Topology fingerprint: hash of (capacity, mask, sorted edge list).
+
+    Keyed off the edge list rather than the dense adjacency bytes: the
+    hashed payload scales with E, not N² (the scan over GraphState's dense
+    adj is unavoidable, but allocates only O(E)), and sparse- and dense-
+    derived layouts of the same graph share cache entries. ``state_edges``
+    emits edges in sorted (row-major upper-triangular) order, making the
+    key canonical."""
+    edges = np.ascontiguousarray(state_edges(state), np.int64)
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(state.capacity).tobytes())
+    h.update(np.asarray(state.mask, np.float32).tobytes())
+    h.update(edges.tobytes())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------
@@ -304,13 +327,17 @@ class Decision:
 
         The offload assignment (user → server) becomes the vertex → device
         placement (server ids folded mod P when P differs from M), ready for
-        :func:`repro.gnn.distributed.distributed_gcn_forward`."""
-        from repro.gnn.distributed import make_partition_plan
+        :func:`repro.gnn.distributed.distributed_gcn_forward`. Plans are
+        built through the sparse O(E) edge-list path — no N×N work — so
+        serving stays viable at PubMed-scale layouts; the forward picks the
+        gather aggregation automatically for such plans."""
+        from repro.gnn.distributed import make_partition_plan_sparse
         m = int(np.asarray(self.cost.t_tran).shape[0])
         p = m if num_devices is None else num_devices
         assign = np.asarray(self.servers, np.int64).copy()
         assign[assign >= 0] %= p
-        return make_partition_plan(np.asarray(self.state.adj), assign, p)
+        return make_partition_plan_sparse(state_edges(self.state), assign,
+                                          p, n=self.state.capacity)
 
     def summary(self) -> dict:
         """Flat dict in the legacy ``GraphEdge.offload`` result format."""
@@ -358,7 +385,7 @@ class GraphEdgeController:
                                              **self.policy_kwargs)
         if self.use_subgraph_reward is None:
             self.use_subgraph_reward = self.partitioner.name != "none"
-        self._cache_key: tuple | None = None
+        self._cache_key: str | None = None
         self._cache_val: Partition | None = None
         self.cache_hits = 0
         self.cache_misses = 0
@@ -369,8 +396,7 @@ class GraphEdgeController:
         topology (mask + adjacency), so pure-mobility steps hit the cache."""
         if not self.cache_partitions:
             return self.partitioner(state)
-        key = (np.asarray(state.mask).tobytes(),
-               np.asarray(state.adj).tobytes())
+        key = topology_key(state)
         if key == self._cache_key and self._cache_val is not None:
             self.cache_hits += 1
             return self._cache_val

@@ -12,11 +12,21 @@ block. Each layer: (1) every device publishes its *boundary rows* (owned
 rows with a cross-partition edge) into a fixed [halo, F] buffer,
 (2) ``all_gather`` over the axis, (3) blocked aggregation against the
 device's extended adjacency slice [L, L + P·halo].
+
+Plans are built **sparse-first**: :func:`make_partition_plan_sparse` is
+vectorized numpy over a COO edge list — O(E) work and memory, no N×N array
+anywhere — and stores the extended adjacency as blocked-sparse padded
+neighbor lists (``nbr_idx``/``nbr_val``, per-device local cols + halo
+cols). The dense entry point :func:`make_partition_plan` is a thin wrapper
+that also materializes the dense ``adj_ext`` blocks (small graphs, and the
+oracle form the dense Pallas kernel consumes);
+:func:`make_partition_plan_dense_reference` keeps the original triple-loop
+builder as the parity oracle for tests and the perf baseline for
+``benchmarks/bench_partition_plan.py``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -24,21 +34,47 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.kernels.gnn_aggregate.ops import (SPARSE_DENSITY_THRESHOLD,
+                                             padded_neighbors_from_coo,
+                                             rank_within_sorted_groups)
+
 
 @dataclass
 class PartitionPlan:
     num_devices: int
     block: int                 # L — owned vertices per device (padded)
     halo: int                  # B — max boundary rows any device publishes
+    n: int                     # global vertex-slot count (gather/forward size)
     perm: np.ndarray           # [P*L] global vertex id per slot (−1 = pad)
     send_idx: np.ndarray       # [P, B] local slot of each published row
     send_mask: np.ndarray      # [P, B] 1 where send_idx is real
-    adj_ext: np.ndarray        # [P, L, L + P*B] extended adjacency slices
+    nbr_idx: np.ndarray        # [P, L, K] extended-col id per neighbor slot
+    nbr_val: np.ndarray        # [P, L, K] edge weight (0 = pad slot)
     mask: np.ndarray           # [P, L] active-vertex mask per slot
+    adj_ext: np.ndarray | None = None   # dense [P, L, L+P*B] blocks (lazy)
 
     @property
     def padded_n(self) -> int:
         return self.num_devices * self.block
+
+    @property
+    def ext_cols(self) -> int:
+        return self.block + self.num_devices * self.halo
+
+    @property
+    def max_degree(self) -> int:
+        """K — padded neighbor slots per row."""
+        return self.nbr_idx.shape[2]
+
+    @property
+    def num_edges(self) -> int:
+        """Directed (both-ways) edge count stored in the plan."""
+        return int(np.count_nonzero(self.nbr_val))
+
+    @property
+    def density(self) -> float:
+        """Global edge density nnz/N² of the planned layout."""
+        return self.num_edges / max(self.n * self.n, 1)
 
     def bytes_per_aggregate(self, feature_dim: int,
                             dtype_bytes: int = 4) -> int:
@@ -46,6 +82,20 @@ class PartitionPlan:
         devices' halo buffers (ring all-gather model)."""
         p, b = self.num_devices, self.halo
         return p * (p - 1) * b * feature_dim * dtype_bytes
+
+    def dense_adj_ext(self) -> np.ndarray:
+        """Materialize (and memoize) the dense [P, L, L+P*B] blocks from the
+        blocked-sparse form. Only for small layouts / the dense kernel."""
+        if self.adj_ext is None:
+            out = np.zeros((self.num_devices, self.block, self.ext_cols),
+                           np.float32)
+            pp = np.arange(self.num_devices)[:, None, None]
+            ll = np.arange(self.block)[None, :, None]
+            np.add.at(out, (np.broadcast_to(pp, self.nbr_idx.shape),
+                            np.broadcast_to(ll, self.nbr_idx.shape),
+                            self.nbr_idx), self.nbr_val)
+            self.adj_ext = out
+        return self.adj_ext
 
     def scatter(self, x: np.ndarray, fill: float = 0.0) -> np.ndarray:
         """[N, ...] global array → [P, L, ...] per-device blocks."""
@@ -57,16 +107,103 @@ class PartitionPlan:
     def gather(self, blocks: np.ndarray) -> np.ndarray:
         """[P, L, ...] → [N, ...] (inverse of scatter)."""
         flat = np.asarray(blocks).reshape((self.padded_n,) + blocks.shape[2:])
-        n = int(self.perm.max()) + 1
-        out = np.zeros((n,) + flat.shape[1:], flat.dtype)
+        out = np.zeros((self.n,) + flat.shape[1:], flat.dtype)
         valid = self.perm >= 0
         out[self.perm[valid]] = flat[valid]
         return out
 
 
+def make_partition_plan_sparse(edges: np.ndarray, assign: np.ndarray,
+                               num_devices: int, n: int | None = None,
+                               weights: np.ndarray | None = None
+                               ) -> PartitionPlan:
+    """Build the halo-exchange plan from a COO edge list — O(E), no N×N.
+
+    ``edges`` is [E, 2] *unique undirected* pairs (i ≠ j, any order); an
+    optional ``weights`` [E] carries per-edge values (default 1.0).
+    Semantics match :func:`make_partition_plan_dense_reference` exactly:
+    same perm (owned vertices ascending per device), same boundary order,
+    same extended-column layout."""
+    assign = np.asarray(assign, np.int64)
+    n = len(assign) if n is None else int(n)
+    assert len(assign) == n, (len(assign), n)
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    w = (np.ones(len(edges), np.float32) if weights is None
+         else np.asarray(weights, np.float32))
+    active = assign >= 0
+
+    # perm / local slots: actives grouped by device, ascending global id
+    act_ids = np.nonzero(active)[0]
+    order = np.argsort(assign[act_ids], kind="stable")
+    owned = act_ids[order]                       # sorted by (device, id)
+    dev = assign[owned]
+    rank, counts = rank_within_sorted_groups(dev, num_devices)
+    block = max(1, int(counts.max(initial=0)))
+    perm = -np.ones(num_devices * block, np.int64)
+    perm[dev * block + rank] = owned
+    local_slot = -np.ones(n, np.int64)
+    local_slot[owned] = rank
+    mask = (np.arange(block)[None, :] < counts[:, None]).astype(np.float32)
+
+    # symmetrize to directed edges between active endpoints
+    i, j = edges.T if len(edges) else (np.zeros(0, np.int64),) * 2
+    keep = active[i] & active[j] & (i != j) if len(edges) else \
+        np.zeros(0, bool)
+    src = np.concatenate([i[keep], j[keep]])
+    dst = np.concatenate([j[keep], i[keep]])
+    w2 = np.concatenate([w[keep], w[keep]])
+
+    # boundary rows: owned vertices with ≥1 cross-device edge
+    cross = assign[src] != assign[dst]
+    is_boundary = np.zeros(n, bool)
+    is_boundary[src[cross]] = True
+    b_ids = np.nonzero(is_boundary)[0]           # ascending global id
+    b_order = np.argsort(assign[b_ids], kind="stable")
+    b_sorted = b_ids[b_order]
+    b_dev = assign[b_sorted]
+    b_rank, b_counts = rank_within_sorted_groups(b_dev, num_devices)
+    halo = max(1, int(b_counts.max(initial=0)))
+    send_idx = np.zeros((num_devices, halo), np.int64)
+    send_mask = np.zeros((num_devices, halo), np.float32)
+    send_idx[b_dev, b_rank] = local_slot[b_sorted]
+    send_mask[b_dev, b_rank] = 1.0
+    halo_of = -np.ones(n, np.int64)              # flat halo-buffer position
+    halo_of[b_sorted] = b_dev * halo + b_rank
+
+    # extended columns: own-block slot for intra-device edges, halo position
+    # (offset by the block) for cross-device edges
+    col = np.where(cross, block + halo_of[dst], local_slot[dst])
+    flat_row = assign[src] * block + local_slot[src]
+    nbr_idx, nbr_val = padded_neighbors_from_coo(flat_row, col, w2,
+                                                 num_devices * block)
+    k = nbr_idx.shape[1]
+    return PartitionPlan(num_devices, block, halo, n, perm, send_idx,
+                         send_mask, nbr_idx.reshape(num_devices, block, k),
+                         nbr_val.reshape(num_devices, block, k), mask)
+
+
 def make_partition_plan(adj: np.ndarray, assign: np.ndarray,
                         num_devices: int) -> PartitionPlan:
-    """Build the static halo-exchange plan for a vertex→device assignment."""
+    """Dense entry point: N×N (symmetric, no self-loop) adjacency → plan.
+
+    Thin wrapper over :func:`make_partition_plan_sparse` (the adjacency is
+    converted to its upper-triangular edge list); the dense ``adj_ext``
+    blocks are materialized eagerly so dense-input callers keep the
+    blocked-matmul serving path."""
+    adj = np.asarray(adj)
+    i, j = np.nonzero(np.triu(adj, k=1))
+    plan = make_partition_plan_sparse(np.stack([i, j], 1), assign,
+                                      num_devices, n=adj.shape[0],
+                                      weights=adj[i, j].astype(np.float32))
+    plan.dense_adj_ext()
+    return plan
+
+
+def make_partition_plan_dense_reference(adj: np.ndarray, assign: np.ndarray,
+                                        num_devices: int) -> PartitionPlan:
+    """The original O(N²) triple-loop builder — parity oracle + perf
+    baseline for the sparse path (tests/test_partition_sparse.py,
+    benchmarks/bench_partition_plan.py)."""
     n = adj.shape[0]
     assign = np.asarray(assign)
     active = assign >= 0
@@ -110,74 +247,124 @@ def make_partition_plan(adj: np.ndarray, assign: np.ndarray,
     mask = np.zeros((num_devices, block), np.float32)
     for p, o in enumerate(owned):
         mask[p, :len(o)] = 1.0
-    return PartitionPlan(num_devices, block, halo, perm, send_idx,
-                         send_mask, adj_ext, mask)
+    # padded neighbor form of the same blocks (row-major nonzero order)
+    pidx, li, ci = np.nonzero(adj_ext)
+    nbr_idx, nbr_val = padded_neighbors_from_coo(
+        pidx * block + li, ci, adj_ext[pidx, li, ci], num_devices * block)
+    k = nbr_idx.shape[1]
+    return PartitionPlan(num_devices, block, halo, n, perm, send_idx,
+                         send_mask, nbr_idx.reshape(num_devices, block, k),
+                         nbr_val.reshape(num_devices, block, k), mask,
+                         adj_ext)
+
+
+def _halo_exchange(x_blk, send_idx, send_mask, axis: str):
+    """Publish boundary rows and all-gather every device's halo buffer:
+    [L, F] → extended rows [L + P·B, F]."""
+    published = x_blk[send_idx] * send_mask[:, None]
+    halo = jax.lax.all_gather(published, axis)        # [P, B, F]
+    return jnp.concatenate([x_blk, halo.reshape(-1, halo.shape[-1])], 0)
 
 
 def _halo_aggregate(x_blk, adj_ext_blk, send_idx, send_mask,
-                    rs, cs_own, cs_halo, axis: str):
+                    rs, cs_ext, axis: str):
     """One distributed normalized aggregation step (runs per device).
 
     x_blk [L, F]; returns rs·A_ext·cs @ [x_own ; halo]."""
-    published = x_blk[send_idx] * send_mask[:, None]
-    halo = jax.lax.all_gather(published, axis)        # [P, B, F]
-    x_ext = jnp.concatenate([x_blk, halo.reshape(-1, halo.shape[-1])], 0)
-    cs = jnp.concatenate([cs_own, cs_halo], 0)
-    a = adj_ext_blk * rs[:, None] * cs[None, :]
+    x_ext = _halo_exchange(x_blk, send_idx, send_mask, axis)
+    a = adj_ext_blk * rs[:, None] * cs_ext[None, :]
     return a @ x_ext
 
 
+def _halo_aggregate_sparse(x_blk, nbr_idx_blk, nbr_val_blk, send_idx,
+                           send_mask, rs, cs_ext, axis: str):
+    """Sparse variant: gather/scan over the padded neighbor slots instead
+    of the [L, L + P·B] dense contraction — O(L·K·F)."""
+    x_ext = _halo_exchange(x_blk, send_idx, send_mask, axis)
+    xc = x_ext * cs_ext[:, None]
+
+    def step(acc, slot):
+        idx_k, val_k = slot
+        return acc + val_k[:, None] * xc[idx_k], None
+
+    acc, _ = jax.lax.scan(
+        step, jnp.zeros_like(x_blk),
+        (nbr_idx_blk.T.astype(jnp.int32), nbr_val_blk.T))
+    return acc * rs[:, None]
+
+
 def distributed_gcn_forward(mesh: Mesh, axis: str, plan: PartitionPlan,
-                            params, x: np.ndarray) -> np.ndarray:
+                            params, x: np.ndarray,
+                            aggregate: str = "auto") -> np.ndarray:
     """Two-(or more-)layer GCN inference, vertex-partitioned over ``axis``.
 
     Matches ``repro.gnn.layers.gcn_apply`` exactly (tested); collective
-    traffic = plan.bytes_per_aggregate per layer."""
-    n_real = int(plan.perm.max()) + 1
+    traffic = plan.bytes_per_aggregate per layer. ``aggregate`` selects the
+    per-device contraction: "dense" (blocked matmul over adj_ext), "sparse"
+    (gather/scan over the plan's padded neighbor lists), or "auto" — sparse
+    whenever the plan was built without dense blocks or its density is
+    below ``SPARSE_DENSITY_THRESHOLD``."""
+    if aggregate == "auto":
+        aggregate = ("sparse" if plan.adj_ext is None
+                     or plan.density < SPARSE_DENSITY_THRESHOLD else "dense")
+    if aggregate not in ("dense", "sparse"):
+        raise ValueError(f"unknown aggregate {aggregate!r}")
+    p_dev, block, halo = plan.num_devices, plan.block, plan.halo
     # global GCN normalization (Â = A+I, D̃^-1/2) computed from the plan mask
-    deg_blocks = plan.adj_ext.sum(2) + plan.mask       # self-loop
+    deg_blocks = plan.nbr_val.sum(2) + plan.mask       # self-loop
     dinv = np.where(deg_blocks > 0, 1.0 / np.sqrt(np.maximum(deg_blocks,
                                                              1e-9)), 0.0)
     dinv = dinv.astype(np.float32)
-    # column scales: own block + halo rows (their global dinv)
-    cs_halo = np.zeros((plan.num_devices, plan.num_devices * plan.halo),
-                       np.float32)
-    dinv_flat_by_slot = dinv.reshape(-1)               # per (p, local)
-    for p in range(plan.num_devices):
-        for q in range(plan.num_devices):
-            for s in range(plan.halo):
-                li = plan.send_idx[q, s]
-                if plan.send_mask[q, s] > 0:
-                    cs_halo[p, q * plan.halo + s] = \
-                        dinv_flat_by_slot[q * plan.block + li]
+    # extended column scales: own block + halo rows (their global dinv).
+    # The halo segment is the same on every device: slot (q, s) of the
+    # flattened buffer holds the row published from device q's send_idx[q,s].
+    dinv_flat = dinv.reshape(-1)                       # per (p, local)
+    src_slots = np.arange(p_dev)[:, None] * block + plan.send_idx
+    cs_halo = (dinv_flat[src_slots] * plan.send_mask).reshape(-1)
+    cs_ext = np.concatenate([dinv, np.broadcast_to(cs_halo,
+                                                   (p_dev, p_dev * halo))],
+                            axis=1).astype(np.float32)
 
-    # add self-loops to the extended adjacency (own-block diagonal)
-    adj_ext = plan.adj_ext.copy()
-    for p in range(plan.num_devices):
-        adj_ext[p, :, :plan.block] += np.diag(plan.mask[p])
+    x_blocks = plan.scatter(np.asarray(x, np.float32))
 
-    x_blocks = plan.scatter(x.astype(np.float32))
+    if aggregate == "dense":
+        # add self-loops to the extended adjacency (own-block diagonal)
+        adj_ext = plan.dense_adj_ext().copy()
+        idx = np.arange(block)
+        adj_ext[:, idx, idx] += plan.mask
+        agg_args = (jnp.asarray(adj_ext),)
+        agg_fn = _halo_aggregate
+    else:
+        # self-loops as one extra neighbor slot: col = own slot, val = mask
+        self_idx = np.broadcast_to(np.arange(block, dtype=np.int32),
+                                   (p_dev, block))[..., None]
+        nbr_idx = np.concatenate([plan.nbr_idx.astype(np.int32), self_idx],
+                                 axis=2)
+        nbr_val = np.concatenate([plan.nbr_val, plan.mask[..., None]],
+                                 axis=2)
+        agg_args = (jnp.asarray(nbr_idx), jnp.asarray(nbr_val))
+        agg_fn = _halo_aggregate_sparse
 
-    def device_fn(x_blk, adj_blk, sidx, smask, rs, cs_own, cs_h, mask_blk,
-                  *ws):
+    def device_fn(x_blk, sidx, smask, rs, cs_e, mask_blk, *rest):
         # strip the sharded leading axis (block size 1 per device)
-        x_blk, adj_blk, sidx, smask = x_blk[0], adj_blk[0], sidx[0], smask[0]
-        rs, cs_own, cs_h, mask_blk = rs[0], cs_own[0], cs_h[0], mask_blk[0]
+        x_blk, sidx, smask = x_blk[0], sidx[0], smask[0]
+        rs, cs_e, mask_blk = rs[0], cs_e[0], mask_blk[0]
+        n_agg = len(agg_args)
+        a_args = tuple(r[0] for r in rest[:n_agg])
+        ws = rest[n_agg:]
         h = x_blk
         for i, w in enumerate(ws):
-            h = _halo_aggregate(h @ w, adj_blk, sidx, smask, rs, cs_own,
-                                cs_h, axis)
+            h = agg_fn(h @ w, *a_args, sidx, smask, rs, cs_e, axis)
             if i < len(ws) - 1:
                 h = jax.nn.relu(h)
         return (h * mask_blk[:, None])[None]
 
-    specs_in = (P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
-                P(axis), P(axis)) + tuple(P() for _ in params)
+    specs_in = (P(axis),) * (6 + len(agg_args)) + \
+        tuple(P() for _ in params)
     fn = shard_map(device_fn, mesh=mesh, in_specs=specs_in,
                    out_specs=P(axis), check_rep=False)
     ws = [jnp.asarray(layer["w"]) for layer in params]
-    out = fn(jnp.asarray(x_blocks), jnp.asarray(adj_ext),
-             jnp.asarray(plan.send_idx), jnp.asarray(plan.send_mask),
-             jnp.asarray(dinv), jnp.asarray(dinv), jnp.asarray(cs_halo),
-             jnp.asarray(plan.mask), *ws)
-    return plan.gather(np.asarray(out))[:n_real]
+    out = fn(jnp.asarray(x_blocks), jnp.asarray(plan.send_idx),
+             jnp.asarray(plan.send_mask), jnp.asarray(dinv),
+             jnp.asarray(cs_ext), jnp.asarray(plan.mask), *agg_args, *ws)
+    return plan.gather(np.asarray(out))

@@ -10,14 +10,30 @@ hardware-adaptation notes). All models share the signature
 where ``adj`` is the raw 0/1 symmetric adjacency (no self-loops) and ``mask``
 marks active vertices. ``impl`` selects the aggregation backend: plain XLA
 einsum or the Pallas blocked-SpMM kernel (``repro.kernels.gnn_aggregate``).
+
+Large sparse graphs (PubMed-scale, Fig. 6 sparse axis) take the **gather
+fast path** automatically: when the (concrete) adjacency has ≥
+``SPARSE_MIN_VERTICES`` vertices and density below
+``SPARSE_DENSITY_THRESHOLD``, ``gcn_apply``/``sgc_apply`` convert Â to
+padded neighbor lists once and every layer aggregates in O(E·F) via
+``repro.kernels.gnn_aggregate.ops.gather_aggregate`` instead of O(N²·F).
+Under jit tracing (or for small/dense graphs) the dense path is kept.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.nnlib.core import glorot_init
-from repro.kernels.gnn_aggregate.ops import normalized_aggregate
+from repro.kernels.gnn_aggregate.ops import (SPARSE_DENSITY_THRESHOLD,
+                                             dense_to_padded_neighbors,
+                                             gather_aggregate,
+                                             normalized_aggregate,
+                                             padded_neighbors_from_coo)
+
+# below this the dense contraction is trivially cheap; skip the conversion
+SPARSE_MIN_VERTICES = 256
 
 
 def _masked_adj(adj: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
@@ -33,9 +49,49 @@ def gcn_norm(adj: jnp.ndarray, mask: jnp.ndarray
     return a, dinv
 
 
+def gcn_norm_sparse(edges: np.ndarray, n: int
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Sparse Eq. (1) normalization: unique undirected [E, 2] edge list →
+    (nbr_idx, nbr_val, D̃^{-1/2}) for Â = A + I, ready for
+    :func:`~repro.kernels.gnn_aggregate.ops.gather_aggregate` — O(E), no
+    dense adjacency. All n vertices are treated as active."""
+    i, j = np.asarray(edges, np.int64).reshape(-1, 2).T
+    loops = np.arange(n)
+    src = np.concatenate([i, j, loops])
+    dst = np.concatenate([j, i, loops])
+    nbr_idx, nbr_val = padded_neighbors_from_coo(src, dst, 1.0, n)
+    deg = np.bincount(src, minlength=n).astype(np.float32)
+    dinv = np.where(deg > 0, 1.0 / np.sqrt(deg), 0.0).astype(np.float32)
+    return nbr_idx, nbr_val, dinv
+
+
+def maybe_padded_neighbors(adj_hat) -> tuple[jnp.ndarray, jnp.ndarray] | None:
+    """(nbr_idx, nbr_val) when the gather fast path pays off, else None.
+
+    Requires a concrete (non-traced) adjacency — under jit we cannot
+    inspect nnz, and the conversion is host-side numpy anyway."""
+    if isinstance(adj_hat, jax.core.Tracer):
+        return None
+    a = np.asarray(adj_hat)
+    n = a.shape[0]
+    if n < SPARSE_MIN_VERTICES or a.shape[0] != a.shape[1]:
+        return None
+    if np.count_nonzero(a) > SPARSE_DENSITY_THRESHOLD * n * n:
+        return None
+    idx, val = dense_to_padded_neighbors(a)
+    return jnp.asarray(idx), jnp.asarray(val)
+
+
 def propagate(adj_hat: jnp.ndarray, dinv: jnp.ndarray, h: jnp.ndarray,
-              impl: str = "xla") -> jnp.ndarray:
-    """D̃^{-1/2} Â D̃^{-1/2} H — the aggregation hot spot (Eq. 1)."""
+              impl: str = "xla", neighbors=None) -> jnp.ndarray:
+    """D̃^{-1/2} Â D̃^{-1/2} H — the aggregation hot spot (Eq. 1).
+
+    ``neighbors`` (from :func:`maybe_padded_neighbors`) routes the layer
+    through the sparse gather kernel; callers with several layers convert
+    once and reuse."""
+    if neighbors is not None:
+        return gather_aggregate(neighbors[0], neighbors[1], h, dinv, dinv,
+                                impl=impl)
     return normalized_aggregate(adj_hat, h, dinv, dinv, impl=impl)
 
 
@@ -51,9 +107,11 @@ def gcn_init(key, dims: list[int]):
 
 def gcn_apply(params, x, adj, mask, impl: str = "xla"):
     a_hat, dinv = gcn_norm(adj, mask)
+    nbrs = maybe_padded_neighbors(a_hat)
     h = x
     for i, layer in enumerate(params):
-        h = propagate(a_hat, dinv, h @ layer["w"], impl=impl)
+        h = propagate(a_hat, dinv, h @ layer["w"], impl=impl,
+                      neighbors=nbrs)
         if i < len(params) - 1:
             h = jax.nn.relu(h)
     return h * mask[:, None]
@@ -72,9 +130,10 @@ def sgc_init(key, in_dim: int, out_dim: int):
 
 def sgc_apply(params, x, adj, mask, impl: str = "xla"):
     a_hat, dinv = gcn_norm(adj, mask)
+    nbrs = maybe_padded_neighbors(a_hat)
     h = x
     for _ in range(SGC_HOPS):
-        h = propagate(a_hat, dinv, h, impl=impl)
+        h = propagate(a_hat, dinv, h, impl=impl, neighbors=nbrs)
     return (h @ params["w"]) * mask[:, None]
 
 

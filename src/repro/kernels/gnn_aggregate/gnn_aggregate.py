@@ -13,6 +13,14 @@ materialized in HBM (saves one full N×N HBM round-trip vs the naive
 
 Grid = (N/bm, F/bf, N/bk); the k axis is the reduction — o_ref accumulates
 across the innermost grid dimension (standard Pallas matmul pattern).
+
+A second, *gather-based* kernel serves the sparse regime (HiCut layouts,
+PubMed-scale edge lists): rows carry a padded neighbor list
+``nbr_idx``/``nbr_val`` ([N, K], 0-padded) and the kernel walks the K slots,
+gathering one [bm, bf] slab of (column-scaled) X rows per slot — O(N·K·F)
+instead of O(N²·F). The row/column normalization stays fused: cs is folded
+into X by the op wrapper, rs is applied on the accumulator before the
+store, so the normalized adjacency is again never materialized.
 """
 from __future__ import annotations
 
@@ -68,3 +76,56 @@ def gnn_aggregate_pallas(adj: jnp.ndarray, x: jnp.ndarray,
     )(adj, x, jnp.broadcast_to(row_scale, (n,)).astype(jnp.float32),
       jnp.broadcast_to(col_scale, (n,)).astype(jnp.float32))
     return out.astype(x.dtype)
+
+
+def _gather_kernel(idx_ref, val_ref, xc_ref, rs_ref, o_ref, *, n_k: int):
+    """One (bm, bf) output tile: walk the K neighbor slots of the row block,
+    gathering the matching rows of the column-scaled X slab."""
+    idx = idx_ref[...]
+    val = val_ref[...].astype(jnp.float32)
+    xc = xc_ref[...].astype(jnp.float32)
+
+    def body(k, acc):
+        rows = jnp.take(xc, idx[:, k], axis=0)       # [bm, bf] gather
+        return acc + val[:, k][:, None] * rows
+
+    acc = jax.lax.fori_loop(0, n_k, body,
+                            jnp.zeros(o_ref.shape, jnp.float32))
+    o_ref[...] = acc * rs_ref[...][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bf", "interpret"))
+def gnn_gather_aggregate_pallas(nbr_idx: jnp.ndarray, nbr_val: jnp.ndarray,
+                                xc: jnp.ndarray, row_scale: jnp.ndarray,
+                                bm: int = 128, bf: int = 128,
+                                interpret: bool = False) -> jnp.ndarray:
+    """Y[i] = rs[i] · Σ_k val[i,k] · XC[idx[i,k]] over padded neighbor rows.
+
+    ``xc`` is X with the column scale already folded in (ops.py does the
+    fold + padding). The whole [n_cols, bf] feature slab is resident per
+    tile, so n_cols·bf·4 B must fit VMEM alongside the [bm, K] index/value
+    blocks — fine for per-device extended blocks (L + P·B rows); at very
+    large n_cols shrink ``bf``. The per-slot row gather lowers through
+    Mosaic's dynamic-gather path (and runs exactly in interpret mode, which
+    is what CI validates on CPU)."""
+    n, k = nbr_idx.shape
+    n_cols, f = xc.shape
+    assert n % bm == 0 and f % bf == 0, (n, f, bm, bf)
+    grid = (n // bm, f // bf)
+    out = pl.pallas_call(
+        functools.partial(_gather_kernel, n_k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_cols, bf), lambda i, j: (0, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, f), jnp.float32),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(nbr_idx.astype(jnp.int32), nbr_val.astype(jnp.float32), xc,
+      jnp.broadcast_to(row_scale, (n,)).astype(jnp.float32))
+    return out
