@@ -1,0 +1,157 @@
+"""Serving throughput: pipelined-jit engine vs the sequential controller
+loop (ROADMAP "Async serving loop" / "Controller-in-jit").
+
+Both arms serve the *same* pre-built request stream — a dynamic rollout
+(``change_rate`` perturbations) with a few inference requests per topology
+interval, ≥128 users:
+
+* **sequential** — the pre-engine ``serve_gnn`` loop verbatim: numpy
+  ``greedy`` policy walking the env user by user, a fresh
+  ``Decision.to_partition_plan`` + blocking ``distributed_gcn_forward``
+  per request.
+* **pipelined-jit** — :class:`repro.serve.ServingEngine` with the
+  ``greedy_jit`` policy: one jitted scan per decision, bounded plan cache,
+  async-dispatch overlap of decision t with forward t−1.
+
+Both warm up on a copy of the first request (compile/trace time excluded
+from both arms), outputs are cross-checked against the single-device
+``gcn_apply`` oracle, and the results land in machine-readable
+**``BENCH_serving.json``** (steps/sec per arm, speedup, parity errors,
+cache counters) so the perf trajectory — and the ≥2× acceptance bar — is
+tracked across PRs. The CI serving smoke lane fails if the engine is
+slower than the sequential loop or diverges from the oracle.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+OUT_JSON = "BENCH_serving.json"
+FEATURES, HIDDEN, CLASSES = 32, 16, 5
+
+
+def _build_requests(rng, capacity, users, steps, repeats, change_rate):
+    from repro.core.dynamic_graph import perturb_scenario, random_scenario
+    from repro.serve import ServeRequest
+
+    state = random_scenario(rng, capacity, users, 3 * users)
+    reqs = []
+    for t in range(steps):
+        if t:
+            state = perturb_scenario(rng, state, change_rate)
+        for _ in range(repeats):
+            x = rng.normal(size=(capacity, FEATURES)).astype(np.float32)
+            reqs.append(ServeRequest(state, x))
+    return reqs
+
+
+def _oracle_err(params, res_out, req) -> float:
+    import jax.numpy as jnp
+
+    from repro.gnn.layers import gcn_apply
+    st = req.state
+    oracle = np.asarray(gcn_apply(params, jnp.asarray(req.x), st.adj,
+                                  st.mask))
+    served = np.nonzero(np.asarray(st.mask) > 0)[0]
+    return float(np.abs(res_out[served] - oracle[served]).max())
+
+
+def _sequential_pass(net, requests, mesh, params, devices):
+    """The pre-engine one-decision→one-forward loop, timed verbatim."""
+    from repro.core.api import GraphEdgeController
+    from repro.gnn.distributed import distributed_gcn_forward
+
+    ctrl = GraphEdgeController(net=net, policy="greedy")
+    outs = []
+    for req in requests:
+        decision = ctrl.step(req.state)
+        plan = decision.to_partition_plan(devices)
+        outs.append(distributed_gcn_forward(mesh, "servers", plan, params,
+                                            req.x))
+    return outs
+
+
+def run(quick: bool = True) -> None:
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core import costs
+    from repro.core.api import GraphEdgeController
+    from repro.gnn.layers import gcn_init
+    from repro.serve import ServingEngine
+
+    cases = ([(128, 5, 2)] if quick else
+             [(128, 8, 4), (256, 8, 4)])   # (users, topo steps, reqs/topo)
+    devices = min(4, len(jax.devices()))
+    mesh = Mesh(np.array(jax.devices()[:devices]), ("servers",))
+    records = []
+    for users, steps, repeats in cases:
+        capacity = users + 8
+        rng = np.random.default_rng(0)
+        net = costs.default_network(rng, capacity, 4)
+        params = gcn_init(jax.random.PRNGKey(0),
+                          [FEATURES, HIDDEN, CLASSES])
+        requests = _build_requests(rng, capacity, users, steps, repeats,
+                                   change_rate=0.2)
+        n_req = len(requests)
+
+        # -- warmup both arms on the first request (compile/trace excluded)
+        warm = [requests[0]]
+        _sequential_pass(net, warm, mesh, params, devices)
+        engine = ServingEngine(
+            controller=GraphEdgeController(net=net, policy="greedy_jit"),
+            params=params, mesh=mesh, num_devices=devices)
+        engine.serve_all(warm)
+
+        # -- sequential loop (fresh controller so its caches start cold)
+        t0 = time.perf_counter()
+        seq_outs = _sequential_pass(net, requests, mesh, params, devices)
+        t_seq = time.perf_counter() - t0
+
+        # -- pipelined-jit engine (fresh caches, jit compiles stay warm)
+        engine = ServingEngine(
+            controller=GraphEdgeController(net=net, policy="greedy_jit"),
+            params=params, mesh=mesh, num_devices=devices)
+        t0 = time.perf_counter()
+        results = engine.serve_all(requests)
+        t_eng = time.perf_counter() - t0
+
+        eng_err = max(_oracle_err(params, r.output, r.request)
+                      for r in results)
+        seq_err = max(_oracle_err(params, o, r)
+                      for o, r in zip(seq_outs, requests))
+        pc, cc = engine.plan_cache_info(), engine.controller.cache_info()
+        rec = {
+            "users": users, "capacity": capacity, "devices": devices,
+            "requests": n_req, "topology_steps": steps,
+            "requests_per_topology": repeats,
+            "seq_steps_per_sec": n_req / t_seq,
+            "engine_steps_per_sec": n_req / t_eng,
+            "speedup": t_seq / t_eng,
+            "seq_oracle_max_err": seq_err,
+            "engine_oracle_max_err": eng_err,
+            "plan_cache": {"hits": pc.hits, "misses": pc.misses},
+            "partition_cache": {"hits": cc.hits, "misses": cc.misses},
+        }
+        records.append(rec)
+        emit(f"serving_sequential_u{users}", t_seq / n_req * 1e6,
+             f"steps_per_sec={rec['seq_steps_per_sec']:.2f}")
+        emit(f"serving_pipelined_jit_u{users}", t_eng / n_req * 1e6,
+             f"steps_per_sec={rec['engine_steps_per_sec']:.2f};"
+             f"speedup={rec['speedup']:.1f}x;"
+             f"max_err={eng_err:.1e}")
+
+    out = pathlib.Path(OUT_JSON)
+    out.write_text(json.dumps({"bench": "serving", "quick": quick,
+                               "records": records}, indent=2) + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--full" not in sys.argv)

@@ -33,10 +33,10 @@ def main() -> None:
     from benchmarks import (bench_ablation, bench_convergence,
                             bench_distributed_gnn, bench_dynamic_cost,
                             bench_gnn_models, bench_hicut, bench_kernels,
-                            bench_partition_plan)
+                            bench_partition_plan, bench_serving)
     for mod in (bench_hicut, bench_partition_plan, bench_kernels,
-                bench_distributed_gnn, bench_dynamic_cost, bench_gnn_models,
-                bench_convergence, bench_ablation):
+                bench_distributed_gnn, bench_serving, bench_dynamic_cost,
+                bench_gnn_models, bench_convergence, bench_ablation):
         name = mod.__name__.split(".")[-1]
         t = time.time()
         kwargs = {"quick": not args.full}

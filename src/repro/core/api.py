@@ -9,14 +9,24 @@ This module exposes that loop behind three swappable pieces:
   are registered by name (``hicut_jax`` [default, jit-able], ``hicut_ref``,
   ``mincut``, ``none``) and selected with :func:`get_partitioner`.
 * :class:`OffloadPolicy` — ``policy(env) -> Assignment``; registered names
-  are ``drlgo``, ``ppo``, ``greedy``, ``random``, ``local``
-  (:func:`get_offload_policy`).
+  are ``drlgo``, ``ppo``, ``greedy``, ``random``, ``local``, plus the
+  pure-jnp ``greedy_jit`` / ``local_jit`` (:func:`get_offload_policy`).
+* :class:`JitPolicy` — the protocol extension for policies whose decision
+  rule is a pure jnp function over an
+  :class:`~repro.core.offload.batched_env.EnvScene`
+  (``decide(scene) -> (assign, reward)``). For these the controller skips
+  the per-user numpy env entirely: ``step()`` runs one jitted
+  ``scene → offload → exact cost`` call, and :meth:`GraphEdgeController.
+  jit_step_fn` closes the loop end to end (HiCut partition included) as a
+  pure function usable inside ``jax.jit`` / ``lax.scan``.
 * :class:`GraphEdgeController` — composes the two. ``step(state)`` runs one
   control step and returns a :class:`Decision` carrying the assignment, the
   partition and the full :class:`~repro.core.costs.SystemCost`; ``rollout``
   drives multiple steps through the dynamic-graph event model (§3.2).
   Partitions are cached across steps whose topology (mask + adjacency) is
-  unchanged — pure mobility steps never re-run the cut.
+  unchanged — a bounded LRU keyed by :func:`topology_key`, so pure mobility
+  steps never re-run the cut and long dynamic rollouts cannot grow the
+  cache without limit (``cache_info()`` reports hits/misses/size).
 
 For training-scale workloads, :meth:`GraphEdgeController.make_batched_env`
 stacks B scenarios into one vmapped
@@ -35,16 +45,20 @@ Registries are plain dicts of factories; third-party strategies plug in with
 from __future__ import annotations
 
 import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Callable, Protocol, runtime_checkable
+from functools import partial
+from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import costs
 from repro.core.dynamic_graph import GraphState, perturb_scenario
 from repro.core.hicut import cut_metrics, hicut_jax, hicut_ref
-from repro.core.offload.batched_env import BatchedOffloadEnv
+from repro.core.offload.batched_env import (BatchedOffloadEnv, EnvScene,
+                                            _scene_core)
 from repro.core.offload.env import OffloadEnv
 
 
@@ -287,6 +301,77 @@ class _DRLGO:
         return _episode_assignment(env, stats, self.name)
 
 
+@runtime_checkable
+class JitPolicy(Protocol):
+    """Offload policy whose decision rule is a *pure jnp* episode rollout.
+
+    ``decide`` must be traceable (an :class:`EnvScene` in, the final
+    ``(assign [N] i32, Σreward)`` out) and hashable-stable (a module-level
+    function, not a per-instance closure) so the controller can close it
+    into one jitted ``scene → offload → cost`` step. Implementations also
+    keep the plain ``OffloadPolicy`` ``__call__(env)`` surface so every
+    existing env-driven caller (benchmarks, trainers) works unchanged.
+    """
+    name: str
+
+    def decide(self, scene: EnvScene) -> tuple[jnp.ndarray, jnp.ndarray]: ...
+
+
+@partial(jax.jit, static_argnames=("decide", "gnn", "m"))
+def _jit_offload_and_cost(net: costs.EdgeNetwork, state: GraphState,
+                          subgraph: jnp.ndarray, zeta_sp, sub_w, cost_scale,
+                          gnn: costs.GNNCostParams, decide, m: int):
+    """The controller's jitted decision hot path: build the scene from the
+    (already-partitioned) layout, roll the policy's scan, and account the
+    exact Eqs. (12)–(14) cost — one XLA computation, zero numpy."""
+    scene = _scene_core(net, state, subgraph, zeta_sp, sub_w, cost_scale,
+                        gnn)
+    assign, reward = decide(scene)
+    w = costs.assignment_onehot(assign, m)
+    return assign, reward, costs.system_cost(net, state, w, gnn)
+
+
+def _jit_policy_call(policy: JitPolicy, env: OffloadEnv) -> Assignment:
+    """OffloadPolicy surface for jit policies: one jitted episode over the
+    env's scenario (the env object is only read, never stepped)."""
+    assign, reward, sc = _jit_offload_and_cost(
+        env.net, env.state, jnp.asarray(env.subgraph, jnp.int32),
+        env.zeta_sp, 1.0 if env.use_subgraph_reward else 0.0,
+        env.cost_scale, env.gnn, type(policy).decide, env.m)
+    stats = {"reward": float(reward), "system_cost": float(sc.c),
+             "t_all": float(sc.t_all), "i_all": float(sc.i_all),
+             "cross_bits": float(sc.cross_bits.sum())}
+    return Assignment(np.asarray(assign, np.int64), float(reward), stats)
+
+
+@register_offload_policy("greedy_jit")
+class _GreedyJit:
+    """GM decision rule as a pure-jnp scan (zero numpy round-trips)."""
+    name = "greedy_jit"
+
+    @staticmethod
+    def decide(scene: EnvScene):
+        from repro.core.offload.baselines import greedy_rollout_jit
+        return greedy_rollout_jit(scene)
+
+    def __call__(self, env: OffloadEnv) -> Assignment:
+        return _jit_policy_call(self, env)
+
+
+@register_offload_policy("local_jit")
+class _LocalJit:
+    """LM decision rule as a pure-jnp scan (zero numpy round-trips)."""
+    name = "local_jit"
+
+    @staticmethod
+    def decide(scene: EnvScene):
+        from repro.core.offload.baselines import local_rollout_jit
+        return local_rollout_jit(scene)
+
+    def __call__(self, env: OffloadEnv) -> Assignment:
+        return _jit_policy_call(self, env)
+
+
 @register_offload_policy("ppo")
 class _PPO:
     """PTOM baseline: single-agent PPO over the global state (§6.1)."""
@@ -317,6 +402,7 @@ class Decision:
     partition: Partition
     assignment: Assignment
     cost: costs.SystemCost
+    topo_key: str | None = None   # topology fingerprint (when cached)
 
     @property
     def servers(self) -> np.ndarray:
@@ -356,6 +442,65 @@ class Decision:
         }
 
 
+class CacheInfo(NamedTuple):
+    """``functools.lru_cache``-style counters (partition + plan caches)."""
+    hits: int
+    misses: int
+    maxsize: int
+    currsize: int
+
+
+class LruCache:
+    """Tiny bounded LRU with hit/miss counters — shared by the controller's
+    topology-keyed partition cache and the serving engine's plan cache."""
+
+    def __init__(self, maxsize: int):
+        self.maxsize = int(maxsize)
+        self._data: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        """Cached value (refreshing recency) or None; counts the lookup."""
+        val = self._data.get(key)
+        if val is None:
+            self.misses += 1
+            return None
+        self._data.move_to_end(key)
+        self.hits += 1
+        return val
+
+    def put(self, key, value) -> None:
+        self._data[key] = value
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)          # evict LRU entry
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def info(self) -> CacheInfo:
+        return CacheInfo(self.hits, self.misses, self.maxsize,
+                         len(self._data))
+
+
+# partitioners whose cut is itself a pure jnp function of the layout —
+# required for the end-to-end jitted step (jit_step_fn)
+_JIT_PARTITION_FNS: dict[str, Callable[[GraphState], jnp.ndarray]] = {
+    "hicut_jax": lambda state: hicut_jax(state.adj, state.mask),
+    "none": lambda state: jnp.where(
+        state.mask > 0,
+        jnp.arange(state.mask.shape[0], dtype=jnp.int32), -1),
+}
+
+
+class JitStepResult(NamedTuple):
+    """All-jnp control-step output (the ``jit_step_fn`` return pytree)."""
+    subgraph: jnp.ndarray         # [N] i32 — partition ids (−1 inactive)
+    servers: jnp.ndarray          # [N] i32 — offload assignment (−1 inactive)
+    reward: jnp.ndarray           # []  f32 — Σ per-step rewards (Eq. 23)
+    cost: costs.SystemCost
+
+
 @dataclass
 class GraphEdgeController:
     """EC controller: perceive → partition → offload → account, pluggable.
@@ -364,6 +509,13 @@ class GraphEdgeController:
     kwargs for name-based construction go in ``partitioner_kwargs`` /
     ``policy_kwargs`` (e.g. ``policy="drlgo",
     policy_kwargs={"trainer": trainer}``).
+
+    With a :class:`JitPolicy` (``greedy_jit`` / ``local_jit``), ``step()``
+    runs the offload + cost accounting as a single jitted XLA call instead
+    of walking the numpy env user by user; learned / numpy policies keep
+    the env-stepping path. ``jit_step_fn()`` returns the fully-pure
+    ``state → JitStepResult`` closure (partition included) for callers that
+    put whole rollouts under ``jax.jit`` / ``lax.scan``.
     """
     net: costs.EdgeNetwork
     policy: OffloadPolicy | str = "greedy"
@@ -375,6 +527,7 @@ class GraphEdgeController:
     cost_scale: float = 1.0       # reward normalizer
     use_subgraph_reward: bool | None = None   # None → auto (off for "none")
     cache_partitions: bool = True
+    cache_size: int = 64          # LRU bound on distinct cached topologies
 
     def __post_init__(self):
         if isinstance(self.partitioner, str):
@@ -385,25 +538,38 @@ class GraphEdgeController:
                                              **self.policy_kwargs)
         if self.use_subgraph_reward is None:
             self.use_subgraph_reward = self.partitioner.name != "none"
-        self._cache_key: str | None = None
-        self._cache_val: Partition | None = None
-        self.cache_hits = 0
-        self.cache_misses = 0
+        self._partition_cache = LruCache(self.cache_size)
 
     # -- perceive + partition (cached on topology) --------------------------
+    def _partition_cached(self, state: GraphState
+                          ) -> tuple[Partition, str | None]:
+        """(partition, topology key) — key is None when caching is off."""
+        if not self.cache_partitions:
+            return self.partitioner(state), None
+        key = topology_key(state)
+        part = self._partition_cache.get(key)
+        if part is None:
+            part = self.partitioner(state)
+            self._partition_cache.put(key, part)
+        return part, key
+
     def partition(self, state: GraphState) -> Partition:
         """Run (or reuse) the partitioner. The cut depends only on the
-        topology (mask + adjacency), so pure-mobility steps hit the cache."""
-        if not self.cache_partitions:
-            return self.partitioner(state)
-        key = topology_key(state)
-        if key == self._cache_key and self._cache_val is not None:
-            self.cache_hits += 1
-            return self._cache_val
-        self.cache_misses += 1
-        part = self.partitioner(state)
-        self._cache_key, self._cache_val = key, part
-        return part
+        topology (mask + adjacency), so pure-mobility steps hit the cache —
+        a bounded LRU (``cache_size`` entries) keyed by ``topology_key``."""
+        return self._partition_cached(state)[0]
+
+    def cache_info(self) -> CacheInfo:
+        """Partition-cache counters (``functools.lru_cache`` convention)."""
+        return self._partition_cache.info()
+
+    @property
+    def cache_hits(self) -> int:
+        return self._partition_cache.hits
+
+    @property
+    def cache_misses(self) -> int:
+        return self._partition_cache.misses
 
     def make_env(self, state: GraphState,
                  partition: Partition | None = None) -> OffloadEnv:
@@ -429,13 +595,61 @@ class GraphEdgeController:
 
     # -- one control step ----------------------------------------------------
     def step(self, state: GraphState) -> Decision:
-        """Perceive → HiCut (or plug-in) → offload → exact cost accounting."""
-        part = self.partition(state)
+        """Perceive → HiCut (or plug-in) → offload → exact cost accounting.
+
+        :class:`JitPolicy` instances dispatch to one jitted
+        ``scene → offload → cost`` XLA call (the partition still goes
+        through the LRU cache); everything else steps the numpy env."""
+        part, key = self._partition_cached(state)
+        if isinstance(self.policy, JitPolicy):
+            assign, reward, sc = _jit_offload_and_cost(
+                self.net, state, jnp.asarray(part.subgraph, jnp.int32),
+                self.zeta_sp, 1.0 if self.use_subgraph_reward else 0.0,
+                self.cost_scale, self.gnn, type(self.policy).decide,
+                int(self.net.server_pos.shape[0]))
+            stats = {"reward": float(reward), "system_cost": float(sc.c),
+                     "t_all": float(sc.t_all), "i_all": float(sc.i_all),
+                     "cross_bits": float(sc.cross_bits.sum())}
+            assignment = Assignment(np.asarray(assign, np.int64),
+                                    float(reward), stats)
+            return Decision(state, part, assignment, sc, topo_key=key)
         env = self.make_env(state, part)
         assignment = self.policy(env)
         w = assignment.onehot(int(self.net.server_pos.shape[0]))
         sc = costs.system_cost(self.net, state, w, self.gnn)
-        return Decision(state, part, assignment, sc)
+        return Decision(state, part, assignment, sc, topo_key=key)
+
+    def jit_step_fn(self) -> Callable[[GraphState], JitStepResult]:
+        """Pure ``state → JitStepResult`` closure over this controller's
+        network/constants: partition (a jnp partitioner: ``hicut_jax`` or
+        ``none``) → jit-policy scan → exact Eqs. (12)–(14) cost. The
+        returned function is traceable — wrap it in ``jax.jit`` or drive a
+        whole rollout through ``lax.scan`` with zero host round-trips.
+        (No partition caching: inside a trace every step re-cuts.)"""
+        if not isinstance(self.policy, JitPolicy):
+            raise TypeError(
+                f"policy {self.policy.name!r} has no pure decide(); "
+                f"jit_step_fn needs a JitPolicy (e.g. greedy_jit/local_jit)")
+        part_fn = _JIT_PARTITION_FNS.get(self.partitioner.name)
+        if part_fn is None:
+            raise ValueError(
+                f"partitioner {self.partitioner.name!r} is not jnp-pure; "
+                f"jit_step_fn supports {sorted(_JIT_PARTITION_FNS)}")
+        net, gnn = self.net, self.gnn
+        zeta_sp, cost_scale = self.zeta_sp, self.cost_scale
+        sub_w = 1.0 if self.use_subgraph_reward else 0.0
+        decide = type(self.policy).decide
+        m = int(net.server_pos.shape[0])
+
+        def step_fn(state: GraphState) -> JitStepResult:
+            subgraph = part_fn(state).astype(jnp.int32)
+            scene = _scene_core(net, state, subgraph, zeta_sp, sub_w,
+                                cost_scale, gnn)
+            assign, reward = decide(scene)
+            w = costs.assignment_onehot(assign, m)
+            return JitStepResult(subgraph, assign, reward,
+                                 costs.system_cost(net, state, w, gnn))
+        return step_fn
 
     # -- multi-step control --------------------------------------------------
     def rollout(self, state: GraphState, steps: int,

@@ -4,11 +4,24 @@ Each baseline drives an :class:`OffloadEnv` episode to completion and
 returns the standard stats dict; the registry adapters in
 ``repro.core.api`` expose them as ``greedy`` / ``random`` / ``local``
 offload policies.
+
+The same GM/LM decision rules also exist as pure-jnp episode rollouts
+(:func:`greedy_rollout_jit` / :func:`local_rollout_jit`) over the
+batched-env primitives (``env_reset``/``env_step`` — the identical
+marginal-cost arithmetic, Eqs. 4–11/22–25), so the whole episode runs as
+one ``lax.scan`` with no per-user Python. These are the decision functions
+behind the ``greedy_jit`` / ``local_jit`` registry entries and the
+controller's fully-jitted ``partition → offload → cost`` step; parity with
+the numpy walks is pinned by ``tests/test_jit_policies.py``.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.offload.batched_env import (EnvScene, _current_user,
+                                            env_reset, env_step)
 from repro.core.offload.env import OffloadEnv
 
 
@@ -53,6 +66,56 @@ def run_random(env: OffloadEnv, seed: int = 0) -> dict:
         _, _, rew, _, _ = env.step(_force_server(env, k))
         total_r += float(rew.sum())
     return _episode_stats(env, total_r)
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp episode rollouts (lax.scan over the batched-env primitives)
+# ---------------------------------------------------------------------------
+
+def _force_server_jnp(m: int, k) -> jnp.ndarray:
+    """jnp twin of :func:`_force_server` ([M, 2] action block)."""
+    return jnp.zeros((m, 2), jnp.float32).at[:, 1].set(1.0).at[k, 0].set(2.0)
+
+
+def _rollout_scene(scene: EnvScene, choose_server):
+    """Roll one full episode under ``lax.scan``: N fixed-shape steps, padded
+    steps are no-ops (batched-env convention). ``choose_server(scene, es)``
+    → server index for the current user. Returns (assign [N] i32, Σreward)."""
+    m = scene.f_k.shape[0]
+
+    def body(es, _):
+        acts = _force_server_jnp(m, choose_server(scene, es))
+        es, _, rew, _, _ = env_step(scene, es, acts)
+        return es, rew.sum()
+
+    es, rewards = jax.lax.scan(body, env_reset(scene), None,
+                               length=scene.mask.shape[0])
+    return es.assign, rewards.sum()
+
+
+def _greedy_choice(scene: EnvScene, es) -> jnp.ndarray:
+    """GM rule: nearest non-full server (nearest overall when all full —
+    the env's least-loaded fallback then resolves the placement)."""
+    d = scene.d_im[_current_user(scene, es)]
+    d_open = jnp.where(es.done_m, jnp.inf, d)
+    d_use = jnp.where(jnp.isfinite(d_open).any(), d_open, d)
+    return jnp.argmin(d_use).astype(jnp.int32)
+
+
+def _local_choice(scene: EnvScene, es) -> jnp.ndarray:
+    """LM rule: nearest server, ignoring load."""
+    return jnp.argmin(scene.d_im[_current_user(scene, es)]).astype(jnp.int32)
+
+
+def greedy_rollout_jit(scene: EnvScene):
+    """GM episode as one jit-able scan — same trajectory as :func:`run_greedy`
+    (server choices exact, rewards to f32 tolerance)."""
+    return _rollout_scene(scene, _greedy_choice)
+
+
+def local_rollout_jit(scene: EnvScene):
+    """LM episode as one jit-able scan — the pure twin of :func:`run_local`."""
+    return _rollout_scene(scene, _local_choice)
 
 
 def run_local(env: OffloadEnv) -> dict:

@@ -119,6 +119,22 @@ def _raw_subgraph(subgraph) -> np.ndarray:
     return np.asarray(subgraph, np.int32)
 
 
+def make_scene(net: EdgeNetwork, state: GraphState, subgraph,
+               zeta_sp: float = 1.0, use_subgraph_reward: bool = True,
+               cost_scale: float = 1.0,
+               gnn: GNNCostParams = GNNCostParams()) -> EnvScene:
+    """One unbatched :class:`EnvScene` from a scenario + subgraph ids.
+
+    Pure and traceable — callable from inside ``jit``/``scan`` (the
+    controller's jitted decision path builds its scene here every step).
+    Eager callers get the same arrays the batched constructors produce."""
+    sub = (jnp.asarray(_raw_subgraph(subgraph))
+           if not isinstance(subgraph, jnp.ndarray)
+           else subgraph.astype(jnp.int32))
+    return _scene_core(net, state, sub, zeta_sp,
+                       1.0 if use_subgraph_reward else 0.0, cost_scale, gnn)
+
+
 @partial(jax.jit, static_argnames=("gnn",))
 def _make_scenes(net: EdgeNetwork, states: GraphState, subgraphs, zeta_sp,
                  sub_w, cost_scale, gnn: GNNCostParams) -> EnvScene:

@@ -27,6 +27,7 @@ builder as the parity oracle for tests and the perf baseline for
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -293,22 +294,21 @@ def _halo_aggregate_sparse(x_blk, nbr_idx_blk, nbr_val_blk, send_idx,
     return acc * rs[:, None]
 
 
-def distributed_gcn_forward(mesh: Mesh, axis: str, plan: PartitionPlan,
-                            params, x: np.ndarray,
-                            aggregate: str = "auto") -> np.ndarray:
-    """Two-(or more-)layer GCN inference, vertex-partitioned over ``axis``.
-
-    Matches ``repro.gnn.layers.gcn_apply`` exactly (tested); collective
-    traffic = plan.bytes_per_aggregate per layer. ``aggregate`` selects the
-    per-device contraction: "dense" (blocked matmul over adj_ext), "sparse"
-    (gather/scan over the plan's padded neighbor lists), or "auto" — sparse
-    whenever the plan was built without dense blocks or its density is
-    below ``SPARSE_DENSITY_THRESHOLD``."""
+def resolve_aggregate(plan: PartitionPlan, aggregate: str = "auto") -> str:
+    """"auto" → "sparse" whenever the plan was built without dense blocks
+    or its density is below ``SPARSE_DENSITY_THRESHOLD``, else "dense"."""
     if aggregate == "auto":
-        aggregate = ("sparse" if plan.adj_ext is None
-                     or plan.density < SPARSE_DENSITY_THRESHOLD else "dense")
+        return ("sparse" if plan.adj_ext is None
+                or plan.density < SPARSE_DENSITY_THRESHOLD else "dense")
     if aggregate not in ("dense", "sparse"):
         raise ValueError(f"unknown aggregate {aggregate!r}")
+    return aggregate
+
+
+def _plan_consts(plan: PartitionPlan, aggregate: str):
+    """One-time numpy prep of everything the forward needs from a plan:
+    (dinv, cs_ext, agg_args) — the fused-normalization scales and the
+    extended adjacency in the selected layout (all jnp, ready to ship)."""
     p_dev, block, halo = plan.num_devices, plan.block, plan.halo
     # global GCN normalization (Â = A+I, D̃^-1/2) computed from the plan mask
     deg_blocks = plan.nbr_val.sum(2) + plan.mask       # self-loop
@@ -325,15 +325,12 @@ def distributed_gcn_forward(mesh: Mesh, axis: str, plan: PartitionPlan,
                                                    (p_dev, p_dev * halo))],
                             axis=1).astype(np.float32)
 
-    x_blocks = plan.scatter(np.asarray(x, np.float32))
-
     if aggregate == "dense":
         # add self-loops to the extended adjacency (own-block diagonal)
         adj_ext = plan.dense_adj_ext().copy()
         idx = np.arange(block)
         adj_ext[:, idx, idx] += plan.mask
         agg_args = (jnp.asarray(adj_ext),)
-        agg_fn = _halo_aggregate
     else:
         # self-loops as one extra neighbor slot: col = own slot, val = mask
         self_idx = np.broadcast_to(np.arange(block, dtype=np.int32),
@@ -343,28 +340,76 @@ def distributed_gcn_forward(mesh: Mesh, axis: str, plan: PartitionPlan,
         nbr_val = np.concatenate([plan.nbr_val, plan.mask[..., None]],
                                  axis=2)
         agg_args = (jnp.asarray(nbr_idx), jnp.asarray(nbr_val))
-        agg_fn = _halo_aggregate_sparse
+    return jnp.asarray(dinv), jnp.asarray(cs_ext), agg_args
 
-    def device_fn(x_blk, sidx, smask, rs, cs_e, mask_blk, *rest):
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "aggregate"))
+def _forward_blocks(mesh: Mesh, axis: str, aggregate: str, x_blocks,
+                    send_idx, send_mask, dinv, cs_ext, mask, agg_args, ws):
+    """Jitted multi-layer forward over the plan's block layout. Returns the
+    [P, L, F_out] output blocks as a device array (no host sync). The jit
+    cache is keyed on (mesh, axis, aggregate) + array shapes, so repeated
+    serving steps — and different plans with equal block/halo/K shapes —
+    reuse one compiled executable."""
+    agg_fn = _halo_aggregate if aggregate == "dense" else \
+        _halo_aggregate_sparse
+
+    def device_fn(x_blk, sidx, smask, rs, cs_e, mask_blk, a_args, ws_):
         # strip the sharded leading axis (block size 1 per device)
         x_blk, sidx, smask = x_blk[0], sidx[0], smask[0]
         rs, cs_e, mask_blk = rs[0], cs_e[0], mask_blk[0]
-        n_agg = len(agg_args)
-        a_args = tuple(r[0] for r in rest[:n_agg])
-        ws = rest[n_agg:]
+        a_args = tuple(a[0] for a in a_args)
         h = x_blk
-        for i, w in enumerate(ws):
+        for i, w in enumerate(ws_):
             h = agg_fn(h @ w, *a_args, sidx, smask, rs, cs_e, axis)
-            if i < len(ws) - 1:
+            if i < len(ws_) - 1:
                 h = jax.nn.relu(h)
         return (h * mask_blk[:, None])[None]
 
-    specs_in = (P(axis),) * (6 + len(agg_args)) + \
-        tuple(P() for _ in params)
+    specs_in = (P(axis),) * 7 + (P(),)       # agg_args sharded, ws replicated
     fn = shard_map(device_fn, mesh=mesh, in_specs=specs_in,
                    out_specs=P(axis), check_rep=False)
-    ws = [jnp.asarray(layer["w"]) for layer in params]
-    out = fn(jnp.asarray(x_blocks), jnp.asarray(plan.send_idx),
-             jnp.asarray(plan.send_mask), jnp.asarray(dinv),
-             jnp.asarray(cs_ext), jnp.asarray(plan.mask), *agg_args, *ws)
+    return fn(x_blocks, send_idx, send_mask, dinv, cs_ext, mask, agg_args,
+              ws)
+
+
+def make_forward_fn(mesh: Mesh, axis: str, plan: PartitionPlan,
+                    aggregate: str = "auto"):
+    """Plan → reusable non-blocking forward.
+
+    Does the per-plan numpy prep (normalization scales, extended adjacency,
+    send maps) exactly once and returns ``forward(x_blocks, params)`` which
+    dispatches the jitted computation and immediately returns the [P, L, F]
+    output blocks as a device array — callers overlap host work with the
+    in-flight computation and block only when they fetch
+    (``plan.gather(np.asarray(out))``). This is the serving engine's hot
+    path (``repro.serve.engine``)."""
+    aggregate = resolve_aggregate(plan, aggregate)
+    dinv, cs_ext, agg_args = _plan_consts(plan, aggregate)
+    send_idx = jnp.asarray(plan.send_idx)
+    send_mask = jnp.asarray(plan.send_mask)
+    mask = jnp.asarray(plan.mask)
+
+    def forward(x_blocks, params):
+        ws = tuple(jnp.asarray(layer["w"]) for layer in params)
+        return _forward_blocks(mesh, axis, aggregate, jnp.asarray(x_blocks),
+                               send_idx, send_mask, dinv, cs_ext, mask,
+                               agg_args, ws)
+    return forward
+
+
+def distributed_gcn_forward(mesh: Mesh, axis: str, plan: PartitionPlan,
+                            params, x: np.ndarray,
+                            aggregate: str = "auto") -> np.ndarray:
+    """Two-(or more-)layer GCN inference, vertex-partitioned over ``axis``.
+
+    Matches ``repro.gnn.layers.gcn_apply`` exactly (tested); collective
+    traffic = plan.bytes_per_aggregate per layer. ``aggregate`` selects the
+    per-device contraction: "dense" (blocked matmul over adj_ext), "sparse"
+    (gather/scan over the plan's padded neighbor lists), or "auto"
+    (:func:`resolve_aggregate`). One-shot blocking wrapper over
+    :func:`make_forward_fn` — pipelined callers build the forward once and
+    dispatch asynchronously."""
+    forward = make_forward_fn(mesh, axis, plan, aggregate)
+    out = forward(plan.scatter(np.asarray(x, np.float32)), params)
     return plan.gather(np.asarray(out))

@@ -1,16 +1,19 @@
-"""Distributed GNN serving launcher driven by the GraphEdge controller.
+"""Distributed GNN serving launcher — thin CLI over the serving engine.
 
     PYTHONPATH=src python -m repro.launch.serve_gnn --devices 4 \
-        --users 48 --partitioner hicut_jax --policy greedy --steps 3
+        --users 48 --partitioner hicut_jax --policy greedy_jit --steps 3
 
-End-to-end control → serving loop on a virtual device mesh (edge server →
-mesh device): each dynamic time step the
-:class:`repro.core.api.GraphEdgeController` perceives the perturbed user
-topology, partitions it, offloads users to servers and accounts the exact
-system cost (Eqs. 12–14); the resulting :class:`~repro.core.api.Decision`
-bridges via ``to_partition_plan()`` into
-:func:`repro.gnn.distributed.distributed_gcn_forward`, whose output is
-checked against the single-device ``gcn_apply`` oracle every step.
+End-to-end control → serving on a virtual device mesh (edge server → mesh
+device), driven by :class:`repro.serve.ServingEngine`: each dynamic time
+step the :class:`repro.core.api.GraphEdgeController` perceives the
+perturbed user topology, partitions it (LRU-cached on the topology
+fingerprint), offloads users to servers (one jitted scan for
+``greedy_jit``/``local_jit``), and the engine pipelines the resulting plan
++ :func:`repro.gnn.distributed.make_forward_fn` inference against the
+*next* step's decision (async dispatch, bounded plan cache — DESIGN.md
+§5). ``--requests-per-step`` issues several inference requests per
+topology interval; repeats hit the plan cache. Every output is checked
+against the single-device ``gcn_apply`` oracle.
 
 ``--dataset`` switches to large-graph mode (the Fig. 6 axis): serve one of
 the synthetic citation datasets (``synth-pubmed`` is ~20k vertices) or a
@@ -24,14 +27,17 @@ above that.
     PYTHONPATH=src python -m repro.launch.serve_gnn --devices 8 \
         --dataset synth-pubmed
 
-NOTE: sets XLA_FLAGS before importing jax — run as a script/module entry,
-not via import-then-call. (Entry-point orientation: see the
+Importing this module has no side effects: the ``XLA_FLAGS`` virtual-device
+mutation happens inside :func:`main`, and only when jax has not been
+imported yet (when it has, the mesh falls back to however many devices the
+already-initialized backend exposes). (Entry-point orientation: see the
 ``repro.launch`` package docstring.)
 """
 from __future__ import annotations
 
 import argparse
 import os
+import sys
 import time
 
 # dense-oracle cutover: above this many vertices the check runs against the
@@ -49,8 +55,12 @@ def _parse_args() -> argparse.Namespace:
     ap.add_argument("--hidden", type=int, default=16)
     ap.add_argument("--classes", type=int, default=5)
     ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--requests-per-step", type=int, default=1,
+                    help="inference requests served per topology step "
+                         "(repeats hit the engine's plan cache)")
+    ap.add_argument("--plan-cache-size", type=int, default=16)
     ap.add_argument("--partitioner", default="hicut_jax")
-    ap.add_argument("--policy", default="greedy")
+    ap.add_argument("--policy", default="greedy_jit")
     ap.add_argument("--change-rate", type=float, default=0.2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dataset", default="",
@@ -78,6 +88,7 @@ def _serve_dataset(args) -> None:
     from repro.kernels.gnn_aggregate.ops import gather_aggregate
 
     rng = np.random.default_rng(args.seed)
+    devices = min(args.devices, len(jax.devices()))
     t0 = time.perf_counter()
     if args.dataset == "random":
         g = random_graph(args.vertices, args.edges, seed=args.seed)
@@ -88,10 +99,10 @@ def _serve_dataset(args) -> None:
           f"(built in {time.perf_counter() - t0:.1f}s)")
 
     t0 = time.perf_counter()
-    assign = hicut_ref(n, g.edges) % args.devices
+    assign = hicut_ref(n, g.edges) % devices
     t_cut = time.perf_counter() - t0
     t0 = time.perf_counter()
-    plan = make_partition_plan_sparse(g.edges, assign, args.devices, n=n)
+    plan = make_partition_plan_sparse(g.edges, assign, devices, n=n)
     t_plan = time.perf_counter() - t0
     print(f"hicut {t_cut:.1f}s, sparse plan {t_plan:.2f}s: "
           f"block={plan.block} halo={plan.halo} max_deg={plan.max_degree} "
@@ -100,7 +111,7 @@ def _serve_dataset(args) -> None:
     params = gcn_init(jax.random.PRNGKey(args.seed),
                       [args.features, args.hidden, args.classes])
     x = rng.normal(size=(n, args.features)).astype(np.float32)
-    mesh = Mesh(np.array(jax.devices()[:args.devices]), ("servers",))
+    mesh = Mesh(np.array(jax.devices()[:devices]), ("servers",))
     t0 = time.perf_counter()
     out = distributed_gcn_forward(mesh, "servers", plan, params, x)
     t_fwd = time.perf_counter() - t0
@@ -125,11 +136,20 @@ def _serve_dataset(args) -> None:
     assert err < 1e-3, "distributed serve diverged from the oracle"
 
 
+def _ensure_virtual_devices(devices: int) -> None:
+    """Request ``devices`` virtual CPU devices — only effective before the
+    first jax import (XLA reads the flag at backend init). Importing this
+    module never mutates the environment; calling main() after jax is
+    already up silently serves on however many devices exist."""
+    if "jax" not in sys.modules:
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={devices}")
+
+
 def main() -> None:
     args = _parse_args()
-    os.environ.setdefault(
-        "XLA_FLAGS",
-        f"--xla_force_host_platform_device_count={args.devices}")
+    _ensure_virtual_devices(args.devices)
 
     if args.dataset:
         _serve_dataset(args)
@@ -143,40 +163,56 @@ def main() -> None:
     from repro.core import costs
     from repro.core.api import GraphEdgeController
     from repro.core.dynamic_graph import perturb_scenario, random_scenario
-    from repro.gnn.distributed import distributed_gcn_forward
     from repro.gnn.layers import gcn_apply, gcn_init
+    from repro.serve import ServeRequest, ServingEngine
 
     rng = np.random.default_rng(args.seed)
     capacity = args.capacity or args.users + 8
     state = random_scenario(rng, capacity, args.users, 3 * args.users)
+    devices = min(args.devices, len(jax.devices()))
     net = costs.default_network(rng, capacity, args.devices)
     controller = GraphEdgeController(net=net, policy=args.policy,
                                      partitioner=args.partitioner)
     params = gcn_init(jax.random.PRNGKey(args.seed),
                       [args.features, args.hidden, args.classes])
-    mesh = Mesh(np.array(jax.devices()[:args.devices]), ("servers",))
+    mesh = Mesh(np.array(jax.devices()[:devices]), ("servers",))
+    engine = ServingEngine(controller=controller, params=params, mesh=mesh,
+                           axis="servers", num_devices=devices,
+                           plan_cache_size=args.plan_cache_size)
 
-    print(f"serving {args.steps} dynamic steps: {args.users} users, "
-          f"{args.devices} edge servers, {args.partitioner} + {args.policy}")
-    for t in range(args.steps):
-        if t:
-            state = perturb_scenario(rng, state, args.change_rate)
-        decision = controller.step(state)
-        plan = decision.to_partition_plan(args.devices)
-        x = rng.normal(size=(capacity, args.features)).astype(np.float32)
-        out = distributed_gcn_forward(mesh, "servers", plan, params, x)
-        oracle = np.asarray(gcn_apply(params, jnp.asarray(x), state.adj,
-                                      state.mask))
-        served = np.nonzero(np.asarray(state.mask) > 0)[0]
-        err = float(np.abs(out[served] - oracle[served]).max())
-        print(f"t={t}: C={float(decision.cost.c):8.3f}  "
-              f"subgraphs={decision.partition.num_subgraphs:3d}  "
-              f"halo={plan.halo:3d} rows/device  "
-              f"collective={plan.bytes_per_aggregate(args.hidden):8d} B  "
+    def requests():
+        nonlocal state
+        for t in range(args.steps):
+            if t:
+                state = perturb_scenario(rng, state, args.change_rate)
+            for _ in range(args.requests_per_step):
+                x = rng.normal(size=(capacity, args.features))
+                yield ServeRequest(state, x.astype(np.float32))
+
+    total = args.steps * args.requests_per_step
+    print(f"serving {total} requests over {args.steps} dynamic steps: "
+          f"{args.users} users, {devices} mesh devices, "
+          f"{args.partitioner} + {args.policy} (pipelined engine)")
+    t0 = time.perf_counter()
+    for res in engine.serve(requests()):
+        st = res.request.state
+        oracle = np.asarray(gcn_apply(params, jnp.asarray(res.request.x),
+                                      st.adj, st.mask))
+        served = np.nonzero(np.asarray(st.mask) > 0)[0]
+        err = float(np.abs(res.output[served] - oracle[served]).max())
+        print(f"req={res.step}: C={float(res.decision.cost.c):8.3f}  "
+              f"subgraphs={res.decision.partition.num_subgraphs:3d}  "
+              f"halo={res.plan.halo:3d} rows/device  "
+              f"collective={res.plan.bytes_per_aggregate(args.hidden):8d} B  "
+              f"plan={'hit ' if res.plan_cache_hit else 'miss'}  "
               f"|serve - oracle|max={err:.2e}")
         assert err < 1e-4, "distributed serve diverged from the oracle"
-    print(f"partition cache: {controller.cache_hits} hits, "
-          f"{controller.cache_misses} misses")
+    dt = time.perf_counter() - t0
+    pc, cc = engine.plan_cache_info(), controller.cache_info()
+    print(f"{total / dt:.2f} req/s  "
+          f"partition cache: {cc.hits} hits / {cc.misses} misses  "
+          f"plan cache: {pc.hits} hits / {pc.misses} misses "
+          f"({pc.currsize}/{pc.maxsize} entries)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,11 @@
+"""GraphEdge serving subsystem — the pipelined request engine.
+
+``repro.serve.engine`` turns the control plane (`repro.core.api`) plus the
+distributed forward (`repro.gnn.distributed`) into a request pipeline:
+topology-delta detection, a bounded plan cache, and async-dispatch overlap
+of the next control decision with the in-flight GNN forward. See
+DESIGN.md §5 ("Serving engine"); ``repro.launch.serve_gnn`` is the CLI.
+"""
+from repro.serve.engine import ServeRequest, ServeResult, ServingEngine
+
+__all__ = ["ServeRequest", "ServeResult", "ServingEngine"]

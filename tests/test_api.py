@@ -196,6 +196,23 @@ def test_partition_cache_hits_on_pure_mobility():
     assert ctrl.cache_misses == 2
 
 
+def test_partition_cache_info_counters():
+    """cache_info() mirrors the hit/miss attributes and reports the LRU
+    bounds; revisiting an older cached topology is a hit (multi-entry)."""
+    state, net = small()
+    ctrl = GraphEdgeController(net=net, policy="greedy")
+    assert ctrl.cache_info() == api.CacheInfo(0, 0, ctrl.cache_size, 0)
+    ctrl.step(state)
+    drop = np.zeros(state.capacity, np.float32)
+    drop[0] = 1.0
+    other = remove_users(state, jnp.asarray(drop))
+    ctrl.step(other)
+    ctrl.step(state)                        # older topology still cached
+    info = ctrl.cache_info()
+    assert (info.hits, info.misses, info.currsize) == (1, 2, 2)
+    assert (ctrl.cache_hits, ctrl.cache_misses) == (info.hits, info.misses)
+
+
 def test_rollout_drives_dynamic_model():
     state, net = small()
     ctrl = GraphEdgeController(net=net, policy="greedy")

@@ -1,0 +1,175 @@
+"""Jitted control-plane hot path: greedy_jit/local_jit parity with the
+numpy baselines, registry integration, and the zero-numpy end-to-end
+jitted step (partition → offload → cost under jax.jit / lax.scan)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costs
+from repro.core.api import (GraphEdgeController, JitPolicy, JitStepResult,
+                            available_offload_policies, get_offload_policy)
+from repro.core.dynamic_graph import perturb_scenario, random_scenario
+from repro.core.offload.baselines import (greedy_rollout_jit,
+                                          local_rollout_jit, run_greedy,
+                                          run_local)
+from repro.core.offload.batched_env import make_scene, stack_states
+from repro.core.offload.env import OffloadEnv
+
+
+def scenario(seed=0, capacity=20, users=16, m=3, e=32):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, capacity, users, e)
+    net = costs.default_network(rng, capacity, m)
+    return state, net
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_jit_policies_registered():
+    assert {"greedy_jit", "local_jit"} <= set(available_offload_policies())
+    for name in ("greedy_jit", "local_jit"):
+        pol = get_offload_policy(name)
+        assert pol.name == name
+        assert isinstance(pol, JitPolicy)
+    assert not isinstance(get_offload_policy("greedy"), JitPolicy)
+    assert not isinstance(get_offload_policy("local"), JitPolicy)
+
+
+# -- parity with the numpy baselines ----------------------------------------
+
+CASES = [
+    dict(seed=0, capacity=20, users=16, m=3, e=32),     # inactive tail
+    dict(seed=1, capacity=16, users=16, m=4, e=40),     # fully active
+    dict(seed=2, capacity=24, users=9, m=2, e=12),      # mostly inactive
+    dict(seed=3, capacity=32, users=30, m=3, e=90),     # servers fill up
+    dict(seed=4, capacity=12, users=12, m=6, e=20),     # more servers
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("jit_name,np_run", [
+    ("greedy_jit", run_greedy), ("local_jit", run_local)])
+def test_rollout_parity_with_numpy_env(case, jit_name, np_run):
+    """Same scene → identical assignments, rewards to f32 tolerance."""
+    state, net = scenario(**case)
+    ctrl = GraphEdgeController(net=net, policy=jit_name)
+    part = ctrl.partition(state)
+    env = OffloadEnv(net, state, part, zeta_sp=ctrl.zeta_sp,
+                     cost_scale=ctrl.cost_scale)
+    stats = np_run(env)
+    scene = make_scene(net, state, part.subgraph, zeta_sp=ctrl.zeta_sp,
+                       cost_scale=ctrl.cost_scale)
+    rollout = (greedy_rollout_jit if jit_name == "greedy_jit"
+               else local_rollout_jit)
+    assign, reward = jax.jit(rollout)(scene)
+    np.testing.assert_array_equal(np.asarray(assign, np.int64), env.assign)
+    assert np.isclose(float(reward), stats["reward"], rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("jit_name,np_name", [("greedy_jit", "greedy"),
+                                              ("local_jit", "local")])
+def test_controller_step_parity(jit_name, np_name):
+    """controller.step() through the jit dispatch == the env-walking path."""
+    for seed in range(3):
+        state, net = scenario(seed=seed, users=14 + seed)
+        d_np = GraphEdgeController(net=net, policy=np_name).step(state)
+        d_j = GraphEdgeController(net=net, policy=jit_name).step(state)
+        np.testing.assert_array_equal(d_j.servers, d_np.servers)
+        np.testing.assert_array_equal(d_j.partition.subgraph,
+                                      d_np.partition.subgraph)
+        assert np.isclose(float(d_j.cost.c), float(d_np.cost.c), rtol=1e-5)
+        assert np.isclose(d_j.assignment.reward, d_np.assignment.reward,
+                          rtol=1e-4, atol=1e-5)
+        # stats dict carries the standard episode keys
+        for key in ("system_cost", "t_all", "i_all", "cross_bits"):
+            assert key in d_j.assignment.stats
+
+
+def test_policy_call_surface_matches_registry_baseline():
+    """The OffloadPolicy __call__(env) surface works for jit policies —
+    the registry contract every env-driven caller relies on."""
+    state, net = scenario()
+    ctrl = GraphEdgeController(net=net, policy="greedy")
+    env = ctrl.make_env(state)
+    a_jit = get_offload_policy("greedy_jit")(env)
+    env2 = ctrl.make_env(state)
+    a_np = get_offload_policy("greedy")(env2)
+    np.testing.assert_array_equal(a_jit.servers, a_np.servers)
+    assert np.isclose(a_jit.reward, a_np.reward, rtol=1e-4, atol=1e-5)
+
+
+def test_empty_scene_all_inactive():
+    """Zero active users: every slot stays unassigned, reward 0."""
+    state, net = scenario(users=2)
+    drop = jnp.ones(state.capacity, jnp.float32)
+    from repro.core.dynamic_graph import remove_users
+    empty = remove_users(state, drop)
+    d = GraphEdgeController(net=net, policy="greedy_jit").step(empty)
+    assert (d.servers == -1).all()
+    assert d.assignment.reward == 0.0
+
+
+# -- the end-to-end jitted step ----------------------------------------------
+
+def test_jit_step_fn_runs_under_jit_and_scan():
+    """partition → offload → cost traces as one XLA computation: a whole
+    rollout runs inside jax.jit + lax.scan (any numpy round-trip would
+    raise a TracerError), and matches the eager step()."""
+    state, net = scenario(users=14)
+    ctrl = GraphEdgeController(net=net, policy="greedy_jit",
+                               partitioner="hicut_jax")
+    fn = ctrl.jit_step_fn()
+
+    rng = np.random.default_rng(7)
+    states = [state]
+    for _ in range(3):
+        states.append(perturb_scenario(rng, states[-1], 0.3))
+    stacked = stack_states(states)
+
+    @jax.jit
+    def roll(sts):
+        def body(carry, st):
+            res = fn(st)
+            return carry + res.cost.c, (res.servers, res.subgraph)
+        return jax.lax.scan(body, jnp.zeros(()), sts)
+
+    total, (servers, subgraphs) = roll(stacked)
+    eager = [ctrl.step(s) for s in states]
+    assert np.isclose(float(total),
+                      sum(float(d.cost.c) for d in eager), rtol=1e-5)
+    for i, d in enumerate(eager):
+        np.testing.assert_array_equal(np.asarray(servers[i]), d.servers)
+        np.testing.assert_array_equal(np.asarray(subgraphs[i]),
+                                      d.partition.subgraph)
+
+
+def test_jit_step_fn_result_type():
+    state, net = scenario()
+    ctrl = GraphEdgeController(net=net, policy="local_jit")
+    res = jax.jit(ctrl.jit_step_fn())(state)
+    assert isinstance(res, JitStepResult)
+    active = np.asarray(state.mask) > 0
+    servers = np.asarray(res.servers)
+    assert ((servers[active] >= 0) & (servers[active] < 3)).all()
+    assert (servers[~active] == -1).all()
+    # cost is the exact batch model for that assignment
+    w = costs.assignment_onehot(jnp.asarray(servers), 3)
+    sc = costs.system_cost(net, state, w)
+    assert np.isclose(float(res.cost.c), float(sc.c), rtol=1e-6)
+
+
+def test_jit_step_fn_rejects_non_jit_pieces():
+    state, net = scenario()
+    with pytest.raises(TypeError, match="greedy_jit"):
+        GraphEdgeController(net=net, policy="greedy").jit_step_fn()
+    with pytest.raises(ValueError, match="hicut_ref"):
+        GraphEdgeController(net=net, policy="greedy_jit",
+                            partitioner="hicut_ref").jit_step_fn()
+    # "none" partitioner is jnp-pure → supported
+    fn = GraphEdgeController(net=net, policy="greedy_jit",
+                             partitioner="none").jit_step_fn()
+    res = jax.jit(fn)(state)
+    active = np.asarray(state.mask) > 0
+    sub = np.asarray(res.subgraph)
+    assert len(np.unique(sub[active])) == active.sum()

@@ -1,0 +1,179 @@
+"""Serving engine: pipelined outputs vs the single-device oracle across a
+dynamic rollout, plan-cache behaviour on unchanged topologies, and the LRU
+bounds on both the plan cache and the controller's partition cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import costs
+from repro.core.api import GraphEdgeController
+from repro.core.dynamic_graph import (move_users, perturb_scenario,
+                                      random_scenario)
+from repro.gnn.layers import gcn_apply, gcn_init
+from repro.serve import ServeRequest, ServingEngine
+
+
+def make_engine(seed=0, capacity=24, users=18, m=3, e=40, policy="greedy_jit",
+                **engine_kw):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, capacity, users, e)
+    net = costs.default_network(rng, capacity, m)
+    ctrl = GraphEdgeController(net=net, policy=policy)
+    params = gcn_init(jax.random.PRNGKey(seed), [8, 6, 4])
+    mesh = Mesh(np.array(jax.devices()[:1]), ("servers",))
+    engine = ServingEngine(controller=ctrl, params=params, mesh=mesh,
+                           **engine_kw)
+    return engine, state, rng
+
+
+def oracle_err(engine, res):
+    st = res.request.state
+    oracle = np.asarray(gcn_apply(engine.params, jnp.asarray(res.request.x),
+                                  st.adj, st.mask))
+    served = np.nonzero(np.asarray(st.mask) > 0)[0]
+    return float(np.abs(res.output[served] - oracle[served]).max())
+
+
+def requests_for(rng, state, steps, repeats, change_rate, features=8):
+    reqs = []
+    for t in range(steps):
+        if t:
+            state = perturb_scenario(rng, state, change_rate)
+        for _ in range(repeats):
+            x = rng.normal(size=(state.capacity, features))
+            reqs.append(ServeRequest(state, x.astype(np.float32)))
+    return reqs
+
+
+# -- correctness across a dynamic rollout ------------------------------------
+
+@pytest.mark.parametrize("policy", ["greedy_jit", "greedy"])
+def test_rollout_outputs_match_oracle(policy):
+    """Pipelined serving across a change_rate>0 rollout stays on the
+    oracle for every request — jit and numpy policies alike."""
+    engine, state, rng = make_engine(policy=policy)
+    reqs = requests_for(rng, state, steps=4, repeats=1, change_rate=0.3)
+    results = engine.serve_all(reqs)
+    assert [r.step for r in results] == list(range(len(reqs)))
+    for res in results:
+        assert oracle_err(engine, res) < 1e-4
+
+
+def test_pipelining_preserves_request_pairing():
+    """Each result carries its own request/decision (depth-1 pipelining
+    must not shift outputs by one)."""
+    engine, state, rng = make_engine()
+    reqs = requests_for(rng, state, steps=5, repeats=1, change_rate=0.4)
+    for res, req in zip(engine.serve(iter(reqs)), reqs):
+        assert res.request is req
+        assert res.decision.state is req.state
+
+
+# -- plan cache --------------------------------------------------------------
+
+def test_plan_cache_hits_on_unchanged_topology():
+    """A request stream on one fixed layout builds the plan exactly once."""
+    engine, state, rng = make_engine()
+    reqs = [ServeRequest(state, rng.normal(size=(state.capacity, 8))
+                         .astype(np.float32)) for _ in range(4)]
+    results = engine.serve_all(reqs)
+    assert [r.plan_cache_hit for r in results] == [False, True, True, True]
+    assert results[0].plan is results[1].plan
+    info = engine.plan_cache_info()
+    assert (info.hits, info.misses, info.currsize) == (3, 1, 1)
+    # the partition cache saw the same stream
+    assert engine.controller.cache_info().hits == 3
+
+
+def test_plan_cache_keyed_on_assignment_too():
+    """Pure mobility keeps the topology (partition cache hits) but can move
+    the greedy assignment — the plan cache must key on both."""
+    engine, state, rng = make_engine()
+    moved = move_users(state, state.pos + jnp.asarray(
+        rng.uniform(300, 900, (state.capacity, 2)).astype(np.float32)))
+    x = rng.normal(size=(state.capacity, 8)).astype(np.float32)
+    r1, r2 = engine.serve_all([ServeRequest(state, x),
+                               ServeRequest(moved, x)])
+    assert engine.controller.cache_info().hits == 1      # same topology
+    same_assign = np.array_equal(r1.decision.servers, r2.decision.servers)
+    # cache hit iff the policy reproduced the assignment
+    assert r2.plan_cache_hit == same_assign
+    for res in (r1, r2):
+        assert oracle_err(engine, res) < 1e-4
+
+
+def test_plan_cache_lru_bound():
+    engine, state, rng = make_engine(plan_cache_size=2)
+    reqs = requests_for(rng, state, steps=4, repeats=1, change_rate=0.6)
+    engine.serve_all(reqs)
+    info = engine.plan_cache_info()
+    assert info.currsize <= 2
+    assert info.maxsize == 2
+
+
+def test_controller_partition_cache_lru_bound():
+    rng = np.random.default_rng(0)
+    state = random_scenario(rng, 20, 14, 30)
+    net = costs.default_network(rng, 20, 3)
+    ctrl = GraphEdgeController(net=net, policy="greedy_jit", cache_size=2)
+    states = [state]
+    for _ in range(3):
+        states.append(perturb_scenario(rng, states[-1], 0.6))
+    for s in states:
+        ctrl.step(s)
+    info = ctrl.cache_info()
+    assert info.currsize <= 2 and info.maxsize == 2
+    # the oldest topology was evicted → stepping it again is a miss
+    misses = info.misses
+    ctrl.step(states[0])
+    assert ctrl.cache_info().misses == misses + 1
+
+
+# -- multi-device end to end --------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_multidevice_subprocess():
+    """Engine round-trip on a real 4-device mesh (virtual CPUs)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core import costs
+        from repro.core.api import GraphEdgeController
+        from repro.core.dynamic_graph import perturb_scenario, random_scenario
+        from repro.gnn.layers import gcn_apply, gcn_init
+        from repro.serve import ServeRequest, ServingEngine
+        rng = np.random.default_rng(2)
+        state = random_scenario(rng, 48, 40, 120)
+        net = costs.default_network(rng, 48, 4)
+        ctrl = GraphEdgeController(net=net, policy="greedy_jit")
+        params = gcn_init(jax.random.PRNGKey(0), [16, 8, 5])
+        mesh = Mesh(np.array(jax.devices()), ("servers",))
+        engine = ServingEngine(controller=ctrl, params=params, mesh=mesh)
+        reqs = []
+        for t in range(3):
+            if t:
+                state = perturb_scenario(rng, state, 0.3)
+            reqs.append(ServeRequest(
+                state, rng.normal(size=(48, 16)).astype(np.float32)))
+        err = 0.0
+        for res in engine.serve(reqs):
+            st = res.request.state
+            oracle = np.asarray(gcn_apply(params, jnp.asarray(res.request.x),
+                                          st.adj, st.mask))
+            act = np.nonzero(np.asarray(st.mask) > 0)[0]
+            err = max(err, float(np.abs(res.output[act] - oracle[act]).max()))
+        print("ERR", err)
+    """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=420, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert float(out.stdout.split("ERR")[1]) < 1e-4
