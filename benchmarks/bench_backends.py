@@ -1,0 +1,188 @@
+"""Backend ablation grid: partitioner × policy × {users, change_rate}
+(ROADMAP "Multi-backend partitioners/policies").
+
+Every cell drives one :class:`repro.core.api.GraphEdgeController` through
+a short dynamic rollout (``perturb_scenario`` at the cell's change rate)
+and records the three axes the backends trade against each other:
+
+* **cut quality** — mean cross-subgraph edges / cut fraction of the
+  partitions actually used (``Partition.cut_metrics``);
+* **SystemCost** — mean exact Eqs. (12)–(14) objective of the offload
+  decisions;
+* **throughput** — control steps/sec (jit compile warmed up out of band).
+
+Each record also carries validity flags (partition covers exactly the
+active vertices; every active user got a server), so the CI backends
+lane can fail on an invalid backend rather than a silently wrong one.
+A final oracle record pins the ``lyapunov`` jit scan to its numpy
+reference (``run_lyapunov``) on a seeded scenario — assignment exact,
+reward to f32 tolerance.
+
+Results land in machine-readable **``BENCH_backends.json``** (common
+schema header + one record per grid cell; see BENCHMARKS.md).
+
+    PYTHONPATH=src:. python benchmarks/bench_backends.py --quick
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, write_bench_json
+
+OUT_JSON = "BENCH_backends.json"
+# the default grid; --partitioner/--policy (or run.py's flags) extend it
+PARTITIONERS = ("hicut_jax", "multilevel", "multilevel_jax", "mincut")
+POLICIES = ("greedy_jit", "local_jit", "lyapunov", "greedy")
+
+
+def _partition_valid(decision) -> bool:
+    active = np.asarray(decision.state.mask) > 0
+    sub = np.asarray(decision.partition.subgraph)
+    return bool((sub[active] >= 0).all() and (sub[~active] == -1).all())
+
+
+def _assignment_valid(decision, m: int) -> bool:
+    active = np.asarray(decision.state.mask) > 0
+    srv = np.asarray(decision.servers)
+    return bool(((srv[active] >= 0) & (srv[active] < m)).all()
+                and (srv[~active] == -1).all())
+
+
+def _lyapunov_oracle_record(seed: int = 0) -> dict:
+    """Jit scan vs numpy reference on one seeded scenario (the CI gate)."""
+    import jax
+
+    from repro.core import costs
+    from repro.core.api import GraphEdgeController
+    from repro.core.dynamic_graph import random_scenario
+    from repro.core.offload.batched_env import make_scene
+    from repro.core.offload.env import OffloadEnv
+    from repro.core.offload.lyapunov import (lyapunov_rollout_jit,
+                                             run_lyapunov)
+
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, 48, 40, 120)
+    net = costs.default_network(rng, 48, 4)
+    ctrl = GraphEdgeController(net=net, policy="lyapunov")
+    part = ctrl.partition(state)
+    env = OffloadEnv(net, state, part, zeta_sp=ctrl.zeta_sp,
+                     cost_scale=ctrl.cost_scale)
+    stats = run_lyapunov(env)
+    scene = make_scene(net, state, part.subgraph, zeta_sp=ctrl.zeta_sp,
+                       cost_scale=ctrl.cost_scale)
+    assign, reward = jax.jit(lyapunov_rollout_jit)(scene)
+    mism = int((np.asarray(assign, np.int64) != env.assign).sum())
+    rerr = abs(float(reward) - stats["reward"]) / max(abs(stats["reward"]),
+                                                      1e-9)
+    return {"seed": seed, "assign_mismatches": mism,
+            "reward_rel_err": rerr, "queue_max": stats["queue_max"]}
+
+
+def run(quick: bool = True, partitioner: str | None = None,
+        policy: str | None = None, steps: int | None = None) -> None:
+    from repro.core import costs
+    from repro.core.api import GraphEdgeController
+    from repro.core.dynamic_graph import random_scenario
+
+    parts = list(PARTITIONERS)
+    pols = list(POLICIES)
+    if partitioner and partitioner not in parts:
+        parts.append(partitioner)
+    if policy and policy not in pols:
+        pols.append(policy)
+    if quick:
+        users_axis, rates = (32,), (0.3,)
+        steps = 4 if steps is None else steps
+    else:
+        users_axis, rates = (64, 128), (0.1, 0.3)
+        steps = 6 if steps is None else steps
+
+    records = []
+    for users in users_axis:
+        capacity = users + 8
+        rng = np.random.default_rng(0)
+        state0 = random_scenario(rng, capacity, users, 3 * users)
+        net = costs.default_network(rng, capacity, 4)
+        for change_rate in rates:
+            for part in parts:
+                for pol in pols:
+                    # warm every compile/dispatch in the cell's exact
+                    # path (incl. the perturbation event ops) with a
+                    # throwaway controller over the identical rollout —
+                    # a bare step(state0) leaves the first cell
+                    # compile-dominated and its steps/sec wrong by >10×
+                    warm = GraphEdgeController(net=net, policy=pol,
+                                               partitioner=part)
+                    warm.rollout(state0, steps, np.random.default_rng(1),
+                                 change_rate=change_rate)
+                    # timed arm: fresh controller (cold partition LRU),
+                    # so the real per-topology cut work is still measured
+                    ctrl = GraphEdgeController(net=net, policy=pol,
+                                               partitioner=part)
+                    t0 = time.perf_counter()
+                    decisions = ctrl.rollout(state0, steps,
+                                             np.random.default_rng(1),
+                                             change_rate=change_rate)
+                    dt = time.perf_counter() - t0
+                    m = int(net.server_pos.shape[0])
+                    cms = [d.partition.cut_metrics for d in decisions]
+                    rec = {
+                        "users": users, "capacity": capacity,
+                        "change_rate": change_rate,
+                        "partitioner": part, "policy": pol,
+                        "steps": steps,
+                        "steps_per_sec": steps / dt,
+                        "system_cost_mean": float(np.mean(
+                            [float(d.cost.c) for d in decisions])),
+                        "cross_edges_mean": float(np.mean(
+                            [c["cross_edges"] for c in cms])),
+                        "cut_fraction_mean": float(np.mean(
+                            [c["cut_fraction"] for c in cms])),
+                        "num_subgraphs_mean": float(np.mean(
+                            [c["num_subgraphs"] for c in cms])),
+                        "partition_valid": all(_partition_valid(d)
+                                               for d in decisions),
+                        "assignment_valid": all(_assignment_valid(d, m)
+                                                for d in decisions),
+                    }
+                    records.append(rec)
+                    emit(f"backends_u{users}_r{change_rate}_{part}_{pol}",
+                         dt / steps * 1e6,
+                         f"cost={rec['system_cost_mean']:.2f};"
+                         f"cut={rec['cross_edges_mean']:.1f};"
+                         f"steps_per_sec={rec['steps_per_sec']:.2f}")
+
+    oracle = _lyapunov_oracle_record()
+    emit("backends_lyapunov_oracle", 0.0,
+         f"assign_mismatches={oracle['assign_mismatches']};"
+         f"reward_rel_err={oracle['reward_rel_err']:.2e}")
+    write_bench_json(OUT_JSON, "backends", quick, records,
+                     grid={"partitioners": parts, "policies": pols,
+                           "users": list(users_axis),
+                           "change_rates": list(rates)},
+                     lyapunov_oracle=oracle)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--quick", action="store_true",
+                      help="small grid (the default)")
+    mode.add_argument("--full", action="store_true",
+                      help="paper-scale grid axes")
+    ap.add_argument("--partitioner", default=None,
+                    help="extra partitioner registry name to include")
+    ap.add_argument("--policy", default=None,
+                    help="extra offload-policy registry name to include")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="rollout steps per cell")
+    args = ap.parse_args()
+    run(quick=not args.full, partitioner=args.partitioner,
+        policy=args.policy, steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

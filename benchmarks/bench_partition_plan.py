@@ -15,12 +15,9 @@ stats, parity error) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
-import json
-import pathlib
-
 import numpy as np
 
-from benchmarks.common import emit, timeit_with_result
+from benchmarks.common import emit, timeit_with_result, write_bench_json
 from repro.core.hicut import hicut_ref
 from repro.data.graphs import random_graph
 from repro.gnn.distributed import (make_partition_plan_dense_reference,
@@ -106,11 +103,7 @@ def run(quick: bool = True) -> None:
                  f"max_err={agg_err:.1e}")
         records.append(rec)
 
-    out = pathlib.Path(OUT_JSON)
-    out.write_text(json.dumps({"bench": "partition_plan",
-                               "quick": quick, "records": records},
-                              indent=2) + "\n")
-    print(f"# wrote {out}")
+    write_bench_json(OUT_JSON, "partition_plan", quick, records)
 
 
 if __name__ == "__main__":

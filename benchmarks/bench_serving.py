@@ -23,13 +23,11 @@ slower than the sequential loop or diverges from the oracle.
 """
 from __future__ import annotations
 
-import json
-import pathlib
 import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_bench_json
 
 OUT_JSON = "BENCH_serving.json"
 FEATURES, HIDDEN, CLASSES = 32, 16, 5
@@ -146,10 +144,7 @@ def run(quick: bool = True) -> None:
              f"speedup={rec['speedup']:.1f}x;"
              f"max_err={eng_err:.1e}")
 
-    out = pathlib.Path(OUT_JSON)
-    out.write_text(json.dumps({"bench": "serving", "quick": quick,
-                               "records": records}, indent=2) + "\n")
-    print(f"# wrote {out}")
+    write_bench_json(OUT_JSON, "serving", quick, records)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,43 @@
-"""Shared benchmark plumbing: CSV emission + quick/full mode."""
+"""Shared benchmark plumbing: CSV emission, quick/full mode, and the
+common ``BENCH_*.json`` schema header (see BENCHMARKS.md)."""
 from __future__ import annotations
 
+import json
+import pathlib
+import subprocess
 import time
+
+# Bump when the *header* layout changes (record layouts are per-bench and
+# documented in BENCHMARKS.md).
+BENCH_SCHEMA_VERSION = 1
+
+
+def git_describe() -> str:
+    """``git describe --always --dirty`` of the tree the bench ran in
+    ("unknown" outside a checkout), so BENCH_*.json files are
+    self-describing across PRs."""
+    try:
+        return subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def write_bench_json(path: str, bench: str, quick: bool, records: list,
+                     **extra) -> None:
+    """Write a ``BENCH_*.json`` with the common schema header: every file
+    carries ``schema`` / ``bench`` / ``quick`` / ``git`` / ``records``
+    (plus bench-specific top-level extras), so readers never need to guess
+    which bench or tree produced it."""
+    payload = {"schema": BENCH_SCHEMA_VERSION, "bench": bench,
+               "quick": bool(quick), "git": git_describe(), **extra,
+               "records": records}
+    out = pathlib.Path(path)
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {out}")
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -21,8 +21,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale axes (slow)")
-    ap.add_argument("--partitioner", default="hicut_ref",
-                    help="partitioner registry name (repro.core.api)")
+    ap.add_argument("--partitioner", default=None,
+                    help="partitioner registry name (repro.core.api); "
+                         "default: each bench's own (hicut_ref)")
     ap.add_argument("--policy", default=None,
                     help="restrict control-plane benches to one offload "
                          "policy registry name (default: compare all)")
@@ -30,18 +31,20 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     t0 = time.time()
-    from benchmarks import (bench_ablation, bench_convergence,
-                            bench_distributed_gnn, bench_dynamic_cost,
-                            bench_gnn_models, bench_hicut, bench_kernels,
+    from benchmarks import (bench_ablation, bench_backends,
+                            bench_convergence, bench_distributed_gnn,
+                            bench_dynamic_cost, bench_gnn_models,
+                            bench_hicut, bench_kernels,
                             bench_partition_plan, bench_serving)
     for mod in (bench_hicut, bench_partition_plan, bench_kernels,
-                bench_distributed_gnn, bench_serving, bench_dynamic_cost,
-                bench_gnn_models, bench_convergence, bench_ablation):
+                bench_distributed_gnn, bench_serving, bench_backends,
+                bench_dynamic_cost, bench_gnn_models, bench_convergence,
+                bench_ablation):
         name = mod.__name__.split(".")[-1]
         t = time.time()
         kwargs = {"quick": not args.full}
         accepted = inspect.signature(mod.run).parameters
-        if "partitioner" in accepted:
+        if "partitioner" in accepted and args.partitioner is not None:
             kwargs["partitioner"] = args.partitioner
         if "policy" in accepted and args.policy is not None:
             kwargs["policy"] = args.policy

@@ -7,10 +7,14 @@ This module exposes that loop behind three swappable pieces:
 
 * :class:`Partitioner` — ``partition(state) -> Partition``; implementations
   are registered by name (``hicut_jax`` [default, jit-able], ``hicut_ref``,
-  ``mincut``, ``none``) and selected with :func:`get_partitioner`.
+  ``mincut``, ``multilevel``, ``multilevel_jax``, ``none``) and selected
+  with :func:`get_partitioner`. Partitioners whose cut is a pure jnp
+  function additionally satisfy :class:`JitPartitioner`
+  (``cut(state) -> [N] i32``) and power the end-to-end jitted step.
 * :class:`OffloadPolicy` — ``policy(env) -> Assignment``; registered names
   are ``drlgo``, ``ppo``, ``greedy``, ``random``, ``local``, plus the
-  pure-jnp ``greedy_jit`` / ``local_jit`` (:func:`get_offload_policy`).
+  pure-jnp ``greedy_jit`` / ``local_jit`` / ``lyapunov``
+  (:func:`get_offload_policy`).
 * :class:`JitPolicy` — the protocol extension for policies whose decision
   rule is a pure jnp function over an
   :class:`~repro.core.offload.batched_env.EnvScene`
@@ -120,6 +124,23 @@ class Partitioner(Protocol):
     def __call__(self, state: GraphState) -> Partition: ...
 
 
+@runtime_checkable
+class JitPartitioner(Protocol):
+    """Partitioner whose cut is a *pure jnp* function of the layout.
+
+    ``cut(state) -> [N] int32`` must be traceable (no numpy, no host
+    round-trips) so :meth:`GraphEdgeController.jit_step_fn` can close it
+    into the end-to-end jitted ``partition → offload → cost`` step.
+    Implementations keep the plain ``__call__(state) -> Partition``
+    surface for every eager caller. The mirror of :class:`JitPolicy` on
+    the partition side: ``hicut_jax``, ``none`` and ``multilevel_jax``
+    satisfy it (DESIGN.md §6 walks through adding another).
+    """
+    name: str
+
+    def cut(self, state: GraphState) -> jnp.ndarray: ...
+
+
 _PARTITIONERS: dict[str, Callable[..., Partitioner]] = {}
 
 
@@ -157,8 +178,11 @@ class _HiCutJax:
     name = "hicut_jax"
 
     def __call__(self, state: GraphState) -> Partition:
-        assigned = np.asarray(hicut_jax(state.adj, state.mask))
+        assigned = np.asarray(self.cut(state))
         return _finish(state, assigned, self.name)
+
+    def cut(self, state: GraphState) -> jnp.ndarray:
+        return hicut_jax(state.adj, state.mask)
 
 
 @register_partitioner("hicut_ref")
@@ -200,6 +224,57 @@ class _NoPartition:
         assigned = np.arange(state.capacity, dtype=np.int64)
         assigned[np.asarray(state.mask) <= 0] = -1
         return _finish(state, assigned, self.name)
+
+    def cut(self, state: GraphState) -> jnp.ndarray:
+        return jnp.where(state.mask > 0,
+                         jnp.arange(state.mask.shape[0], dtype=jnp.int32),
+                         -1)
+
+
+@register_partitioner("multilevel")
+class _Multilevel:
+    """METIS-style multilevel k-way cut: heavy-edge-matching coarsening,
+    greedy balanced initial partition, boundary KL refinement
+    (repro.core.multilevel; the Zeng et al. arXiv:2210.17281 family)."""
+    name = "multilevel"
+
+    def __init__(self, num_parts: int = 4, coarsen_to: int | None = None,
+                 sweeps: int = 4, imbalance: float = 1.1):
+        self.num_parts = num_parts
+        self.coarsen_to = coarsen_to
+        self.sweeps = sweeps
+        self.imbalance = imbalance
+
+    def __call__(self, state: GraphState) -> Partition:
+        from repro.core.multilevel import multilevel_partition_state
+        assigned = multilevel_partition_state(
+            state, self.num_parts, coarsen_to=self.coarsen_to,
+            sweeps=self.sweeps, imbalance=self.imbalance)
+        return _finish(state, assigned, self.name)
+
+
+@register_partitioner("multilevel_jax")
+class _MultilevelJax:
+    """Fixed-shape jnp refinement stage of the multilevel pipeline — a
+    :class:`JitPartitioner`, so it also runs inside ``jit_step_fn()``."""
+    name = "multilevel_jax"
+
+    def __init__(self, num_parts: int = 4, moves: int | None = None,
+                 imbalance: float = 1.1):
+        self.num_parts = num_parts
+        self.moves = moves                 # None → 2·capacity at call time
+        self.imbalance = imbalance
+
+    def _moves(self, state: GraphState) -> int:
+        return 2 * state.capacity if self.moves is None else int(self.moves)
+
+    def cut(self, state: GraphState) -> jnp.ndarray:
+        from repro.core.multilevel import multilevel_jax
+        return multilevel_jax(state.adj, state.mask, self.num_parts,
+                              self._moves(state), self.imbalance)
+
+    def __call__(self, state: GraphState) -> Partition:
+        return _finish(state, np.asarray(self.cut(state)), self.name)
 
 
 # ---------------------------------------------------------------------------
@@ -331,17 +406,29 @@ def _jit_offload_and_cost(net: costs.EdgeNetwork, state: GraphState,
     return assign, reward, costs.system_cost(net, state, w, gnn)
 
 
-def _jit_policy_call(policy: JitPolicy, env: OffloadEnv) -> Assignment:
-    """OffloadPolicy surface for jit policies: one jitted episode over the
-    env's scenario (the env object is only read, never stepped)."""
+def _jit_decide(decide, net: costs.EdgeNetwork, state: GraphState, subgraph,
+                zeta_sp, sub_w, cost_scale, gnn: costs.GNNCostParams,
+                m: int) -> tuple[Assignment, costs.SystemCost]:
+    """Run the jitted hot path and package the standard episode stats —
+    the one place the (assignment, stats, cost) post-processing lives for
+    both the ``__call__(env)`` surface and ``GraphEdgeController.step``."""
     assign, reward, sc = _jit_offload_and_cost(
-        env.net, env.state, jnp.asarray(env.subgraph, jnp.int32),
-        env.zeta_sp, 1.0 if env.use_subgraph_reward else 0.0,
-        env.cost_scale, env.gnn, type(policy).decide, env.m)
+        net, state, jnp.asarray(subgraph, jnp.int32), zeta_sp, sub_w,
+        cost_scale, gnn, decide, m)
     stats = {"reward": float(reward), "system_cost": float(sc.c),
              "t_all": float(sc.t_all), "i_all": float(sc.i_all),
              "cross_bits": float(sc.cross_bits.sum())}
-    return Assignment(np.asarray(assign, np.int64), float(reward), stats)
+    return Assignment(np.asarray(assign, np.int64), float(reward), stats), sc
+
+
+def _jit_policy_call(policy: JitPolicy, env: OffloadEnv) -> Assignment:
+    """OffloadPolicy surface for jit policies: one jitted episode over the
+    env's scenario (the env object is only read, never stepped)."""
+    assignment, _ = _jit_decide(
+        type(policy).decide, env.net, env.state, env.subgraph, env.zeta_sp,
+        1.0 if env.use_subgraph_reward else 0.0, env.cost_scale, env.gnn,
+        env.m)
+    return assignment
 
 
 @register_offload_policy("greedy_jit")
@@ -367,6 +454,22 @@ class _LocalJit:
     def decide(scene: EnvScene):
         from repro.core.offload.baselines import local_rollout_jit
         return local_rollout_jit(scene)
+
+    def __call__(self, env: OffloadEnv) -> Assignment:
+        return _jit_policy_call(self, env)
+
+
+@register_offload_policy("lyapunov")
+class _Lyapunov:
+    """Queue-aware drift-plus-penalty scheduler (ACE-GNN-style system-aware
+    scheduling): per-server virtual queues + marginal-cost penalty, rolled
+    as one pure-jnp scan (repro.core.offload.lyapunov)."""
+    name = "lyapunov"
+
+    @staticmethod
+    def decide(scene: EnvScene):
+        from repro.core.offload.lyapunov import lyapunov_rollout_jit
+        return lyapunov_rollout_jit(scene)
 
     def __call__(self, env: OffloadEnv) -> Assignment:
         return _jit_policy_call(self, env)
@@ -483,16 +586,6 @@ class LruCache:
                          len(self._data))
 
 
-# partitioners whose cut is itself a pure jnp function of the layout —
-# required for the end-to-end jitted step (jit_step_fn)
-_JIT_PARTITION_FNS: dict[str, Callable[[GraphState], jnp.ndarray]] = {
-    "hicut_jax": lambda state: hicut_jax(state.adj, state.mask),
-    "none": lambda state: jnp.where(
-        state.mask > 0,
-        jnp.arange(state.mask.shape[0], dtype=jnp.int32), -1),
-}
-
-
 class JitStepResult(NamedTuple):
     """All-jnp control-step output (the ``jit_step_fn`` return pytree)."""
     subgraph: jnp.ndarray         # [N] i32 — partition ids (−1 inactive)
@@ -602,16 +695,11 @@ class GraphEdgeController:
         through the LRU cache); everything else steps the numpy env."""
         part, key = self._partition_cached(state)
         if isinstance(self.policy, JitPolicy):
-            assign, reward, sc = _jit_offload_and_cost(
-                self.net, state, jnp.asarray(part.subgraph, jnp.int32),
+            assignment, sc = _jit_decide(
+                type(self.policy).decide, self.net, state, part.subgraph,
                 self.zeta_sp, 1.0 if self.use_subgraph_reward else 0.0,
-                self.cost_scale, self.gnn, type(self.policy).decide,
+                self.cost_scale, self.gnn,
                 int(self.net.server_pos.shape[0]))
-            stats = {"reward": float(reward), "system_cost": float(sc.c),
-                     "t_all": float(sc.t_all), "i_all": float(sc.i_all),
-                     "cross_bits": float(sc.cross_bits.sum())}
-            assignment = Assignment(np.asarray(assign, np.int64),
-                                    float(reward), stats)
             return Decision(state, part, assignment, sc, topo_key=key)
         env = self.make_env(state, part)
         assignment = self.policy(env)
@@ -621,20 +709,23 @@ class GraphEdgeController:
 
     def jit_step_fn(self) -> Callable[[GraphState], JitStepResult]:
         """Pure ``state → JitStepResult`` closure over this controller's
-        network/constants: partition (a jnp partitioner: ``hicut_jax`` or
-        ``none``) → jit-policy scan → exact Eqs. (12)–(14) cost. The
+        network/constants: partition (a :class:`JitPartitioner`:
+        ``hicut_jax``, ``none`` or ``multilevel_jax``) → jit-policy scan →
+        exact Eqs. (12)–(14) cost. The
         returned function is traceable — wrap it in ``jax.jit`` or drive a
         whole rollout through ``lax.scan`` with zero host round-trips.
         (No partition caching: inside a trace every step re-cuts.)"""
         if not isinstance(self.policy, JitPolicy):
             raise TypeError(
                 f"policy {self.policy.name!r} has no pure decide(); "
-                f"jit_step_fn needs a JitPolicy (e.g. greedy_jit/local_jit)")
-        part_fn = _JIT_PARTITION_FNS.get(self.partitioner.name)
-        if part_fn is None:
+                f"jit_step_fn needs a JitPolicy "
+                f"(e.g. greedy_jit/local_jit/lyapunov)")
+        if not isinstance(self.partitioner, JitPartitioner):
             raise ValueError(
                 f"partitioner {self.partitioner.name!r} is not jnp-pure; "
-                f"jit_step_fn supports {sorted(_JIT_PARTITION_FNS)}")
+                f"jit_step_fn needs a JitPartitioner with a traceable "
+                f"cut() (e.g. hicut_jax, none, multilevel_jax)")
+        part_fn = self.partitioner.cut
         net, gnn = self.net, self.gnn
         zeta_sp, cost_scale = self.zeta_sp, self.cost_scale
         sub_w = 1.0 if self.use_subgraph_reward else 0.0

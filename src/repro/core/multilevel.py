@@ -1,0 +1,408 @@
+"""Multilevel METIS-style graph partitioner: coarsen → cut → refine.
+
+The HiCut transcription (``repro.core.hicut``) and the pairwise max-flow
+baseline (``repro.core.mincut_baseline``) are the paper's own algorithms;
+this module adds the classic multilevel k-way pipeline ("GNN at the Edge",
+Zeng et al., arXiv:2210.17281, partitions GNN serving over edge servers
+with exactly this family) as a third ``Partitioner`` registry backend:
+
+1. **Coarsen** — repeated *heavy-edge matching*: every vertex proposes its
+   heaviest incident edge, mutual proposals collapse into one coarse
+   vertex, edge weights accumulate. The matching is vectorized numpy in
+   the style of :func:`repro.kernels.gnn_aggregate.ops.
+   rank_within_sorted_groups` (lexsort + group-boundary scatter, no
+   per-vertex Python), so coarsening one level is O(E log E).
+2. **Initial cut** — greedy balanced growth on the coarsest graph:
+   vertices in descending-weight order go to the already-connected part
+   with room (capacity ``ceil(Σweight / k · imbalance)``), falling back to
+   the least-loaded part.
+3. **Refine** — project each level back and run boundary
+   Kernighan–Lin-style sweeps: move the vertex with the largest positive
+   cut-gain to its best-connected other part, subject to the capacity
+   constraint, with exact incremental connectivity updates (every applied
+   move strictly decreases the cut, so sweeps terminate). A final
+   rebalance pass guarantees the capacity constraint holds at the finest
+   level whenever it is feasible (``k · cap ≥ N`` by construction).
+
+:func:`multilevel_jax` is the fixed-shape jnp twin of the *refinement*
+stage (balanced initial chunks over active ranks + ``moves`` best-gain
+boundary moves under ``lax.fori_loop``) — pure and jit-able, so the
+``multilevel_jax`` registry entry satisfies the ``JitPartitioner``
+protocol and runs inside ``GraphEdgeController.jit_step_fn()`` next to
+``hicut_jax`` (coarsening stays host-side; see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# coarsening: heavy-edge matching + contraction (vectorized numpy)
+# ---------------------------------------------------------------------------
+
+def heavy_edge_matching(n: int, edges: np.ndarray, weights: np.ndarray,
+                        rounds: int = 8, seed: int = 0) -> np.ndarray:
+    """Greedy matching preferring heavy edges, fully vectorized.
+
+    Each round every still-free vertex proposes its heaviest free neighbor
+    (lexsort by (vertex, weight); the last entry of each vertex group is
+    the heaviest — the ``rank_within_sorted_groups`` bucketing idiom);
+    mutual proposals become matches (Luby-style hand-shaking). Weight ties
+    are broken by a fresh random jitter each round — without it uniform-
+    weight graphs stall on deterministic non-mutual proposals. Returns
+    ``match [n]`` with ``match[v]`` = partner (``v`` itself for
+    unmatched/isolated vertices).
+    """
+    match = np.full(n, -1, np.int64)
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    if len(edges):
+        rng = np.random.default_rng(seed)
+        src = np.concatenate([edges[:, 0], edges[:, 1]])
+        dst = np.concatenate([edges[:, 1], edges[:, 0]])
+        w = np.concatenate([weights, weights]).astype(np.float64)
+        # symmetric per-edge jitter so both endpoints see the same ranking
+        scale = max(float(w.max()), 1.0)
+        for _ in range(rounds):
+            free = match < 0
+            ok = free[src] & free[dst]
+            if not ok.any():
+                break
+            jitter = rng.uniform(0.0, 1e-3 * scale, len(edges))
+            wj = w + np.concatenate([jitter, jitter])
+            s, d, ww = src[ok], dst[ok], wj[ok]
+            order = np.lexsort((ww, s))          # by vertex, then weight
+            s_s, d_s = s[order], d[order]
+            last = np.ones(len(s_s), bool)
+            last[:-1] = s_s[1:] != s_s[:-1]      # heaviest entry per vertex
+            prop = np.full(n, -1, np.int64)
+            prop[s_s[last]] = d_s[last]
+            v = np.nonzero(prop >= 0)[0]
+            mutual = v[prop[prop[v]] == v]       # hand-shake
+            a = mutual[mutual < prop[mutual]]
+            if len(a) == 0:
+                continue                          # re-jitter and retry
+            b = prop[a]
+            match[a] = b
+            match[b] = a
+    unmatched = np.nonzero(match < 0)[0]
+    match[unmatched] = unmatched
+    return match
+
+
+def contract(n: int, edges: np.ndarray, weights: np.ndarray,
+             vwgt: np.ndarray, match: np.ndarray):
+    """Collapse matched pairs → ``(n_c, cmap, c_edges, c_weights, c_vwgt)``.
+
+    ``cmap [n]`` maps fine → coarse ids; parallel coarse edges merge with
+    summed weights; coarse vertex weights are the summed cluster weights.
+    """
+    rep = np.minimum(np.arange(n), match)
+    uniq, cmap = np.unique(rep, return_inverse=True)
+    n_c = len(uniq)
+    c_vwgt = np.bincount(cmap, weights=vwgt, minlength=n_c)
+    if len(edges):
+        ci, cj = cmap[edges[:, 0]], cmap[edges[:, 1]]
+        keep = ci != cj
+        lo = np.minimum(ci[keep], cj[keep])
+        hi = np.maximum(ci[keep], cj[keep])
+        key = lo * n_c + hi
+        uk, inv = np.unique(key, return_inverse=True)
+        c_w = np.bincount(inv, weights=weights[keep])
+        c_edges = np.stack([uk // n_c, uk % n_c], axis=1)
+    else:
+        c_edges = np.zeros((0, 2), np.int64)
+        c_w = np.zeros(0, np.float64)
+    return n_c, cmap, c_edges, c_w, c_vwgt
+
+
+# ---------------------------------------------------------------------------
+# initial cut + refinement (numpy)
+# ---------------------------------------------------------------------------
+
+def _csr(n: int, edges: np.ndarray, weights: np.ndarray):
+    """Symmetric CSR (indptr, nbr, wt) from an undirected edge list."""
+    src = np.concatenate([edges[:, 0], edges[:, 1]])
+    dst = np.concatenate([edges[:, 1], edges[:, 0]])
+    w = np.concatenate([weights, weights])
+    order = np.argsort(src, kind="stable")
+    counts = np.bincount(src, minlength=n)
+    indptr = np.concatenate([[0], np.cumsum(counts)])
+    return indptr, dst[order], w[order]
+
+
+def initial_partition(n_c: int, edges: np.ndarray, weights: np.ndarray,
+                      vwgt: np.ndarray, k: int, cap: float,
+                      rng: np.random.Generator | None = None) -> np.ndarray:
+    """Greedy graph growing on the coarsest graph (GGGP-style).
+
+    Parts are grown one at a time from a random seed vertex, always
+    absorbing the unassigned vertex most connected to the growing part
+    (ties → heavier vertex) until the part reaches its balanced share;
+    leftovers join the best-connected part with room (least-loaded when
+    nothing fits — refinement + the rebalance pass restore the constraint
+    on the finer levels)."""
+    rng = np.random.default_rng(0) if rng is None else rng
+    assign = np.full(n_c, -1, np.int64)
+    load = np.zeros(k)
+    conn = np.zeros((n_c, k))
+    indptr, nbr, wt = _csr(n_c, edges, weights) if len(edges) else \
+        (np.zeros(n_c + 1, np.int64), np.zeros(0, np.int64),
+         np.zeros(0, np.float64))
+    total = float(vwgt.sum())
+
+    def absorb(v: int, p: int) -> None:
+        assign[v] = p
+        load[p] += vwgt[v]
+        js = nbr[indptr[v]:indptr[v + 1]]
+        # add.at: parallel edges contribute once each (fancy-index += drops
+        # duplicate-neighbor contributions)
+        np.add.at(conn, (js, p), wt[indptr[v]:indptr[v + 1]])
+
+    for p in range(k - 1):
+        share = total * (p + 1) / k - load[:p + 1].sum() + load[p]
+        free = np.nonzero(assign < 0)[0]
+        if len(free) == 0:
+            break
+        absorb(int(rng.choice(free)), p)        # random seed vertex
+        while load[p] < min(share, cap):
+            free = np.nonzero(assign < 0)[0]
+            if len(free) == 0:
+                break
+            fits = free[load[p] + vwgt[free] <= cap]
+            if len(fits) == 0:
+                break
+            v = int(fits[np.argmax(conn[fits, p] + 1e-9 * vwgt[fits])])
+            absorb(v, p)
+    # the last part takes what's left; spill anything over cap by best fit
+    for v in np.nonzero(assign < 0)[0]:
+        fits = load + vwgt[v] <= cap
+        if fits.any():
+            absorb(v, int(np.argmax(np.where(fits, conn[v] - 1e-9 * load,
+                                             -np.inf))))
+        else:
+            absorb(v, int(np.argmin(load)))
+    return assign
+
+
+def refine(n: int, edges: np.ndarray, weights: np.ndarray, vwgt: np.ndarray,
+           assign: np.ndarray, k: int, cap: float,
+           sweeps: int = 4) -> np.ndarray:
+    """Boundary KL-style refinement sweeps with a capacity constraint.
+
+    Each sweep ranks boundary vertices by cut-gain (vectorized), then
+    applies moves in that order with *exact* incremental connectivity
+    updates — a move is taken only if its re-checked gain is still
+    positive and the target part has room, so the cut strictly decreases.
+    A leading rebalance pass drains any over-capacity part (allowing
+    zero/negative-gain moves) so the constraint holds whenever feasible.
+    """
+    assign = np.asarray(assign, np.int64).copy()
+    if len(edges) == 0 and (np.bincount(assign, weights=vwgt,
+                                        minlength=k) <= cap).all():
+        return assign
+    indptr, nbr, wt = _csr(n, edges, weights) if len(edges) else \
+        (np.zeros(n + 1, np.int64), np.zeros(0, np.int64),
+         np.zeros(0, np.float64))
+    conn = np.zeros((n, k))
+    if len(edges):
+        np.add.at(conn, (edges[:, 0], assign[edges[:, 1]]), weights)
+        np.add.at(conn, (edges[:, 1], assign[edges[:, 0]]), weights)
+    load = np.bincount(assign, weights=vwgt, minlength=k).astype(np.float64)
+
+    def move(v: int, b: int) -> None:
+        a = assign[v]
+        assign[v] = b
+        load[a] -= vwgt[v]
+        load[b] += vwgt[v]
+        js = nbr[indptr[v]:indptr[v + 1]]
+        ws = wt[indptr[v]:indptr[v + 1]]
+        np.add.at(conn, (js, a), -ws)
+        np.add.at(conn, (js, b), ws)
+
+    # rebalance: drain over-capacity parts into the best-connected part
+    # with room (gain may be negative; balance beats cut here)
+    for a in range(k):
+        while load[a] > cap:
+            vs = np.nonzero(assign == a)[0]
+            if len(vs) == 0:
+                break
+            # evacuate the least-attached vertex (per unit weight) first
+            v = int(vs[np.argmin(conn[vs, a] / np.maximum(vwgt[vs], 1e-9))])
+            fits = load + vwgt[v] <= cap
+            fits[a] = False
+            if not fits.any():
+                break
+            move(v, int(np.argmax(np.where(fits, conn[v], -np.inf))))
+
+    rows = np.arange(n)
+    for _ in range(sweeps):
+        cur = conn[rows, assign]
+        ext = conn.copy()
+        ext[rows, assign] = -np.inf
+        best = np.argmax(ext, axis=1)
+        gain = ext[rows, best] - cur
+        cand = np.nonzero(gain > 0)[0]
+        if len(cand) == 0:
+            break
+        moved = 0
+        for v in cand[np.argsort(-gain[cand], kind="stable")]:
+            a = assign[v]
+            row = conn[v].copy()
+            row[a] = -np.inf
+            b = int(np.argmax(row))
+            if row[b] - conn[v, a] <= 0 or load[b] + vwgt[v] > cap:
+                continue
+            move(v, b)
+            moved += 1
+        if moved == 0:
+            break
+    return assign
+
+
+# ---------------------------------------------------------------------------
+# the full pipeline
+# ---------------------------------------------------------------------------
+
+def _cut_cost(edges: np.ndarray, weights: np.ndarray,
+              assign: np.ndarray) -> float:
+    if len(edges) == 0:
+        return 0.0
+    cross = assign[edges[:, 0]] != assign[edges[:, 1]]
+    return float(weights[cross].sum())
+
+
+def multilevel_partition(n: int, edges: np.ndarray, num_parts: int,
+                         weights: np.ndarray | None = None,
+                         active: np.ndarray | None = None,
+                         coarsen_to: int | None = None, sweeps: int = 4,
+                         imbalance: float = 1.1, restarts: int = 4,
+                         seed: int = 0) -> np.ndarray:
+    """Coarsen → initial cut → refine. Returns [n] part ids (−1 inactive).
+
+    ``restarts`` independent graph-growing initial cuts are refined on the
+    coarsest graph and the best one is projected back (the coarsest graph
+    is small, so restarts are nearly free). The capacity constraint is
+    ``cap = ceil(#active / k · imbalance)`` vertices per part — always
+    feasible (``k · cap ≥ #active``), and the returned assignment respects
+    it at the finest level."""
+    active = np.ones(n, bool) if active is None else np.asarray(active, bool)
+    ids = np.nonzero(active)[0]
+    na = len(ids)
+    out = np.full(n, -1, np.int64)
+    if na == 0:
+        return out
+    k = max(1, min(int(num_parts), na))
+    cap = float(np.ceil(na / k * imbalance))
+    coarsen_to = max(8 * k, 32) if coarsen_to is None else int(coarsen_to)
+
+    # compact to the active subgraph
+    local = np.full(n, -1, np.int64)
+    local[ids] = np.arange(na)
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    keep = np.zeros(len(edges), bool)
+    if len(edges):
+        keep = (active[edges[:, 0]] & active[edges[:, 1]]
+                & (edges[:, 0] != edges[:, 1]))
+    e = local[edges[keep]]
+    w = (np.ones(len(e), np.float64) if weights is None
+         else np.asarray(weights, np.float64)[keep])
+    vwgt = np.ones(na, np.float64)
+
+    # coarsen until the graph is small or matching stalls
+    levels: list[tuple] = []       # (cmap, finer (n, e, w, vwgt))
+    cn, ce, cw, cv = na, e, w, vwgt
+    while cn > coarsen_to and len(ce):
+        match = heavy_edge_matching(cn, ce, cw, seed=seed + len(levels))
+        n2, cmap, e2, w2, v2 = contract(cn, ce, cw, cv, match)
+        if n2 >= 0.95 * cn:        # matching stalled — stop coarsening
+            break
+        levels.append((cmap, (cn, ce, cw, cv)))
+        cn, ce, cw, cv = n2, e2, w2, v2
+
+    rng = np.random.default_rng(seed)
+    assign, best = None, np.inf
+    for _ in range(max(1, int(restarts))):
+        cand = initial_partition(cn, ce, cw, cv, k, cap, rng=rng)
+        cand = refine(cn, ce, cw, cv, cand, k, cap, sweeps=sweeps)
+        cost = _cut_cost(ce, cw, cand)
+        if cost < best:
+            assign, best = cand, cost
+    for cmap, (fn, fe, fw, fv) in reversed(levels):
+        assign = assign[cmap]      # project back one level
+        assign = refine(fn, fe, fw, fv, assign, k, cap, sweeps=sweeps)
+    out[ids] = assign
+    return out
+
+
+def multilevel_partition_state(state, num_parts: int,
+                               coarsen_to: int | None = None,
+                               sweeps: int = 4,
+                               imbalance: float = 1.1) -> np.ndarray:
+    """Run the pipeline on a ``GraphState`` layout (the ``multilevel``
+    entry of the ``repro.core.api`` partitioner registry)."""
+    from repro.core.api import state_edges   # function-level: keep this
+    return multilevel_partition(              # module numpy-only otherwise
+        state.capacity, state_edges(state), num_parts,
+        active=np.asarray(state.mask) > 0, coarsen_to=coarsen_to,
+        sweeps=sweeps, imbalance=imbalance)
+
+
+# ---------------------------------------------------------------------------
+# jnp refinement (fixed shape, jit-able — the JitPartitioner path)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_parts", "moves"))
+def multilevel_jax(adj: jnp.ndarray, mask: jnp.ndarray, num_parts: int = 4,
+                   moves: int = 128,
+                   imbalance: float = 1.1) -> jnp.ndarray:
+    """Fixed-shape jnp twin of the refinement stage.
+
+    adj [N, N] {0,1} symmetric, mask [N] {0,1}. Starts from balanced
+    contiguous chunks over the active ranks and applies up to ``moves``
+    best-gain boundary moves (one vertex per iteration, exact incremental
+    connectivity updates, capacity-guarded) under ``lax.fori_loop``.
+    Returns [N] int32 part ids (−1 for masked-out vertices). Pure and
+    traceable — the ``multilevel_jax`` registry entry's ``cut()`` runs it
+    inside ``GraphEdgeController.jit_step_fn()``.
+    """
+    n = adj.shape[0]
+    k = int(num_parts)
+    active = mask > 0
+    adjw = (jnp.asarray(adj, jnp.float32) * active[:, None]
+            * active[None, :])
+    na = active.sum()
+    rank = jnp.cumsum(active.astype(jnp.int32)) - 1
+    assign = jnp.where(active, (rank * k) // jnp.maximum(na, 1),
+                       -1).astype(jnp.int32)
+    cap = jnp.ceil(na.astype(jnp.float32) / k * imbalance)
+    onehot = (jax.nn.one_hot(jnp.clip(assign, 0, k - 1), k)
+              * active[:, None].astype(jnp.float32))
+    conn = adjw @ onehot                       # [N, k] part connectivity
+    load = onehot.sum(0)
+    rows = jnp.arange(n)
+
+    def body(_, carry):
+        assign, conn, load = carry
+        own = jnp.clip(assign, 0, k - 1)
+        cur = conn[rows, own]
+        ext = conn.at[rows, own].set(-jnp.inf)
+        best = jnp.argmax(ext, axis=1).astype(jnp.int32)
+        gain = ext[rows, best] - cur
+        eligible = active & (load[best] + 1.0 <= cap)
+        gain = jnp.where(eligible, gain, -jnp.inf)
+        v = jnp.argmax(gain)
+        do = gain[v] > 0
+        a, b = own[v], best[v]
+        dof = do.astype(jnp.float32)
+        assign = assign.at[v].set(jnp.where(do, b, assign[v]))
+        col = adjw[v] * dof
+        conn = conn.at[:, a].add(-col).at[:, b].add(col)
+        load = load.at[a].add(-dof).at[b].add(dof)
+        return assign, conn, load
+
+    assign, _, _ = jax.lax.fori_loop(0, moves, body, (assign, conn, load))
+    return assign

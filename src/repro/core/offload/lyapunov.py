@@ -1,0 +1,167 @@
+"""Lyapunov drift-plus-penalty offloading scheduler (queue-aware baseline).
+
+System-aware co-inference schedulers (ACE-GNN, arXiv:2511.11586) place GNN
+tasks by balancing instantaneous cost against server load/queue state; the
+classic formalization is Lyapunov optimization. This module adds that
+scheduler as an ``OffloadPolicy`` registry backend (``lyapunov``):
+
+* every edge server ``k`` keeps a **virtual queue** ``Q_k`` measuring how
+  far its arrivals have run ahead of its fair service share. One user
+  arrives per scheduler step, so the per-step service vector is
+  ``μ_k = cap_k / Σ cap`` (each server drains in proportion to its
+  capacity) and the update is the standard
+  ``Q_k ← max(Q_k + 1{k chosen} − μ_k, 0)``;
+* the per-user decision minimizes the **drift-plus-penalty** score
+  ``Q_k + V · ΔC(i, k) / cost_scale`` over the eligible (non-full)
+  servers, where ``ΔC`` is the exact marginal system cost the MAMDP env
+  charges (Eqs. 4–11 deltas via
+  :func:`repro.core.offload.batched_env.marginal_cost`). ``V`` trades
+  queue stability (small V → balance load by capacity share) against
+  greedy cost minimization (large V → cost only).
+
+The decision rule is a pure-jnp ``lax.scan`` over the batched-env
+primitives (``env_reset`` / ``env_step`` — identical arithmetic to the
+numpy walk), so the registry entry satisfies the
+:class:`repro.core.api.JitPolicy` protocol: ``GraphEdgeController.step()``
+runs the whole episode as one jitted XLA call and ``jit_step_fn()`` traces
+it inside ``lax.scan`` rollouts with zero numpy round-trips.
+
+``run_lyapunov`` is the numpy oracle: it drives the reference
+:class:`~repro.core.offload.env.OffloadEnv` step by step, choosing servers
+from the same float32 scene arrays, and is pinned step-for-step against
+the scan by ``tests/test_lyapunov.py`` and the backends CI lane.
+
+The registered policy runs at ``DEFAULT_V`` — the ``JitPolicy`` contract
+requires ``decide`` to be a module-level (hashable-stable) function, so
+the V knob lives on the functional APIs (``lyapunov_rollout_jit(scene,
+v_weight)`` / ``run_lyapunov(env, v_weight)``) rather than the registry
+instance; see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import KB
+from repro.core.offload.baselines import (_episode_stats, _force_server,
+                                          _force_server_jnp)
+from repro.core.offload.batched_env import (EnvScene, _current_user,
+                                            env_reset, env_step,
+                                            make_scene, marginal_cost)
+from repro.core.offload.env import OffloadEnv
+
+DEFAULT_V = 1.0   # drift-plus-penalty trade-off of the registered policy
+
+
+def _marginal_cost_all(scene: EnvScene, es, i) -> jnp.ndarray:
+    """[M] marginal cost of hosting the current user on every server."""
+    m = scene.f_k.shape[0]
+    return jax.vmap(lambda k: marginal_cost(scene, es, i, k))(jnp.arange(m))
+
+
+def _lyapunov_choice(scene: EnvScene, es, q: jnp.ndarray,
+                     v_weight) -> jnp.ndarray:
+    """argmin_k Q_k + V·ΔC(i,k)/cost_scale over eligible servers (the
+    env's least-loaded fallback applies when every server is full)."""
+    i = _current_user(scene, es)
+    dc = _marginal_cost_all(scene, es, i)
+    score = q + v_weight * dc / scene.cost_scale
+    eligible = ~es.done_m
+    eligible = jnp.where(eligible.any(), eligible, es.load == es.load.min())
+    return jnp.argmin(jnp.where(eligible, score, jnp.inf)).astype(jnp.int32)
+
+
+def lyapunov_scan(scene: EnvScene, v_weight=DEFAULT_V):
+    """Full episode as one ``lax.scan``; padded steps are no-ops.
+
+    Returns ``(assign [N] i32, Σreward, q_final [M], q_max [])`` — the
+    final virtual queues and the largest queue backlog seen anywhere in
+    the episode (the boundedness certificate the tests assert on)."""
+    m = scene.f_k.shape[0]
+    mu = scene.caps / jnp.maximum(scene.caps.sum(), 1.0)
+
+    def body(carry, _):
+        es, q = carry
+        k = _lyapunov_choice(scene, es, q, v_weight)
+        valid = (es.t < scene.num_steps).astype(jnp.float32)
+        es, _, rew, _, _ = env_step(scene, es, _force_server_jnp(m, k))
+        arrival = jnp.zeros((m,), jnp.float32).at[k].set(valid)
+        q = jnp.maximum(q + arrival - mu * valid, 0.0)
+        return (es, q), (rew.sum(), q.max())
+
+    init = (env_reset(scene), jnp.zeros((m,), jnp.float32))
+    (es, q), (rewards, qmax) = jax.lax.scan(body, init, None,
+                                            length=scene.mask.shape[0])
+    return es.assign, rewards.sum(), q, jnp.maximum(qmax.max(), 0.0)
+
+
+def lyapunov_rollout_jit(scene: EnvScene, v_weight=DEFAULT_V):
+    """``JitPolicy.decide`` surface: ``scene → (assign, Σreward)``."""
+    assign, reward, _, _ = lyapunov_scan(scene, v_weight)
+    return assign, reward
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle (drives the reference OffloadEnv step by step)
+# ---------------------------------------------------------------------------
+
+def _scene_numpy(env: OffloadEnv) -> dict:
+    """The env's scenario as the float32 scene arrays the scan consumes."""
+    scene = make_scene(env.net, env.state, env.subgraph,
+                       zeta_sp=env.zeta_sp,
+                       use_subgraph_reward=env.use_subgraph_reward,
+                       cost_scale=env.cost_scale, gnn=env.gnn)
+    return {f: np.asarray(getattr(scene, f)) for f in scene._fields}
+
+
+def _marginal_cost_all_np(sc: dict, assign: np.ndarray, i: int
+                          ) -> np.ndarray:
+    """float32 numpy mirror of :func:`_marginal_cost_all` (same formulas,
+    same f32 arrays, so the argmin matches the scan's step for step)."""
+    m = sc["f_k"].shape[0]
+    kb32 = np.float32(KB)
+    bits = sc["kb"][i] * kb32
+    t_up = bits / np.maximum(sc["rate_up"][i], np.float32(1.0))
+    i_up = bits * sc["zeta_im"]
+    t_com = bits / sc["f_k"]
+    ks = np.arange(m)
+    placed = (assign[None, :] >= 0) & (assign[None, :] != ks[:, None])
+    w = sc["adj"][i][None, :] * placed                       # [M, N]
+    pair = bits + sc["kb"] * kb32
+    rate = sc["rate_sv"][:, np.clip(assign, 0, m - 1)]       # [M, N]
+    t_tran = np.sum(w * pair[None, :] / np.maximum(rate, np.float32(1.0)),
+                    axis=1, dtype=np.float32)
+    i_com = np.sum(w * sc["zeta_kl"] * pair[None, :], axis=1,
+                   dtype=np.float32)
+    return t_up + i_up + t_com + t_tran + i_com + sc["gnn_vec"][i]
+
+
+def run_lyapunov(env: OffloadEnv, v_weight: float = DEFAULT_V) -> dict:
+    """Numpy reference episode; stats gain ``queue_final``/``queue_max``."""
+    sc = _scene_numpy(env)
+    m = env.m
+    caps = sc["caps"]
+    mu = caps / max(float(caps.sum()), 1.0)
+    q = np.zeros(m, np.float32)
+    q_max = 0.0
+    env.reset()
+    total_r = 0.0
+    while env.t < env.num_steps:
+        i = env.current_user()
+        dc = _marginal_cost_all_np(sc, env.assign, i)
+        score = q + np.float32(v_weight) * dc / sc["cost_scale"]
+        eligible = ~env.done_m
+        if not eligible.any():
+            eligible = env.load == env.load.min()
+        k = int(np.argmin(np.where(eligible, score, np.inf)))
+        _, _, rew, _, _ = env.step(_force_server(env, k))
+        total_r += float(rew.sum())
+        arrival = np.zeros(m, np.float32)
+        arrival[k] = 1.0
+        q = np.maximum(q + arrival - mu, 0.0)
+        q_max = max(q_max, float(q.max()))
+    stats = _episode_stats(env, total_r)
+    stats["queue_final"] = q
+    stats["queue_max"] = q_max
+    return stats

@@ -9,7 +9,7 @@ Runnable entry points (``PYTHONPATH=src python -m repro.launch.<name>``):
 
 | entry point | lane | what it does |
 |---|---|---|
-| ``serve_gnn``  | GraphEdge | thin CLI over the pipelined :class:`repro.serve.ServingEngine`: control decisions (jitted for ``greedy_jit``/``local_jit``) overlap in-flight distributed GCN forwards, plans are LRU-cached on (topology, assignment), every output checked against the single-device oracle. ``--dataset synth-pubmed`` serves a ~20k-vertex graph through the sparse O(E) plan + gather path |
+| ``serve_gnn``  | GraphEdge | thin CLI over the pipelined :class:`repro.serve.ServingEngine`: control decisions (jitted for the ``JitPolicy`` entries ``greedy_jit`` [default] / ``local_jit`` / ``lyapunov``) overlap in-flight distributed GCN forwards, plans are LRU-cached on (topology, assignment) behind ``--plan-cache-size`` (default 16), every output checked against the single-device oracle. ``--partitioner``/``--policy`` select any registry backend (e.g. ``multilevel`` + ``lyapunov``); ``--dataset synth-pubmed`` serves a ~20k-vertex graph through the sparse O(E) plan + gather path |
 | ``train``      | LM        | training loop for a registry arch (``--reduced`` CPU dims or ``--production`` mesh shardings) |
 | ``serve``      | LM        | prefill + autoregressive decode (optionally ``--kv-int8``) |
 | ``dryrun``     | LM        | lower + compile one (arch × shape × mesh) combo; memory/FLOPs analysis |

@@ -7,8 +7,10 @@ End-to-end control → serving on a virtual device mesh (edge server → mesh
 device), driven by :class:`repro.serve.ServingEngine`: each dynamic time
 step the :class:`repro.core.api.GraphEdgeController` perceives the
 perturbed user topology, partitions it (LRU-cached on the topology
-fingerprint), offloads users to servers (one jitted scan for
-``greedy_jit``/``local_jit``), and the engine pipelines the resulting plan
+fingerprint; any registry backend — ``hicut_jax``, ``multilevel``,
+``multilevel_jax``, ``mincut``, …), offloads users to servers (one jitted
+scan for the ``JitPolicy`` entries ``greedy_jit``/``local_jit``/
+``lyapunov``), and the engine pipelines the resulting plan
 + :func:`repro.gnn.distributed.make_forward_fn` inference against the
 *next* step's decision (async dispatch, bounded plan cache — DESIGN.md
 §5). ``--requests-per-step`` issues several inference requests per

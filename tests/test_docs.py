@@ -30,3 +30,53 @@ def test_checker_catches_bad_flag(tmp_path, monkeypatch):
         "PYTHONPATH=src python examples/train_drlgo.py --no-such-flag",
         errors)
     assert errors and "--no-such-flag" in errors[0]
+
+
+def test_checker_sees_registered_backends():
+    """The register_* call-site scan resolves every shipped backend."""
+    checker = _load_checker()
+    names = checker.registered_names()
+    assert {"hicut_jax", "mincut", "multilevel", "multilevel_jax",
+            "greedy_jit", "lyapunov", "drlgo"} <= names
+
+
+def test_checker_catches_unregistered_doc_name():
+    checker = _load_checker()
+    errors = []
+    text = ("```sh\nPYTHONPATH=src python -m repro.launch.serve_gnn "
+            "--policy no_such_policy\n```\n")
+    checker.check_registry_names("DOC.md", text,
+                                 checker.registered_names(), errors)
+    assert errors and "no_such_policy" in errors[0]
+    # registry-table extraction: first column of "registry name" tables
+    table = ("| registry name | notes |\n|---|---|\n"
+             "| `phantom_cut` | nope |\n")
+    names = checker.documented_registry_names(table)
+    assert names == {"phantom_cut"}
+    # a different table stacked directly underneath must not leak
+    stacked = (table + "| file | meaning |\n|---|---|\n"
+               "| `not_a_backend` | other table |\n")
+    assert checker.documented_registry_names(stacked) == {"phantom_cut"}
+
+
+def test_checker_catches_launch_table_drift(tmp_path):
+    """A runnable launch module missing from the entry-point table (or a
+    ghost row) fails the launch-table check."""
+    checker = _load_checker()
+    errors = []
+    checker.check_launch_table(errors)
+    assert not errors, errors               # the shipped table is in sync
+    launch = tmp_path / "launch"
+    launch.mkdir()
+    (launch / "__init__.py").write_text(
+        '"""Entry points.\n\n| ``ghost`` | lane | uses ``--nope`` |\n"""\n')
+    (launch / "orphan.py").write_text("def main():\n    pass\n")
+    old = checker.LAUNCH_INIT
+    checker.LAUNCH_INIT = launch / "__init__.py"
+    try:
+        errors = []
+        checker.check_launch_table(errors)
+    finally:
+        checker.LAUNCH_INIT = old
+    joined = "\n".join(errors)
+    assert "ghost" in joined and "orphan" in joined

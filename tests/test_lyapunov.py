@@ -1,0 +1,205 @@
+"""Lyapunov drift-plus-penalty scheduler (repro.core.offload.lyapunov):
+step-for-step parity with the numpy oracle, virtual-queue boundedness,
+the V trade-off, and the round-trips through GraphEdgeController /
+ServingEngine / the traced jit_step_fn scan."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costs
+from repro.core.api import (GraphEdgeController, JitPolicy,
+                            get_offload_policy)
+from repro.core.dynamic_graph import (perturb_scenario, random_scenario,
+                                      remove_users)
+from repro.core.offload.batched_env import make_scene, stack_states
+from repro.core.offload.env import OffloadEnv
+from repro.core.offload.lyapunov import (lyapunov_rollout_jit,
+                                         lyapunov_scan, run_lyapunov)
+
+
+def scenario(seed=0, capacity=24, users=20, m=3, e=60):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, capacity, users, e)
+    net = costs.default_network(rng, capacity, m)
+    return state, net
+
+
+def make_env_and_scene(state, net, ctrl):
+    part = ctrl.partition(state)
+    env = OffloadEnv(net, state, part, zeta_sp=ctrl.zeta_sp,
+                     cost_scale=ctrl.cost_scale)
+    scene = make_scene(net, state, part.subgraph, zeta_sp=ctrl.zeta_sp,
+                       cost_scale=ctrl.cost_scale)
+    return env, scene
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_registered_as_jit_policy():
+    pol = get_offload_policy("lyapunov")
+    assert pol.name == "lyapunov"
+    assert isinstance(pol, JitPolicy)
+
+
+# -- parity with the numpy oracle --------------------------------------------
+
+CASES = [
+    dict(seed=0, capacity=24, users=20, m=3, e=60),     # inactive tail
+    dict(seed=1, capacity=16, users=16, m=4, e=40),     # fully active
+    dict(seed=2, capacity=28, users=12, m=2, e=24),     # mostly inactive
+    dict(seed=3, capacity=32, users=30, m=3, e=90),     # servers fill up
+    dict(seed=4, capacity=14, users=12, m=6, e=24),     # more servers
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_scan_matches_numpy_oracle(case):
+    """Same scene → identical placements step for step, rewards to f32
+    tolerance (the scan and the oracle share the f32 scene arrays)."""
+    state, net = scenario(**case)
+    ctrl = GraphEdgeController(net=net, policy="lyapunov")
+    env, scene = make_env_and_scene(state, net, ctrl)
+    stats = run_lyapunov(env)
+    assign, reward = jax.jit(lyapunov_rollout_jit)(scene)
+    np.testing.assert_array_equal(np.asarray(assign, np.int64), env.assign)
+    assert np.isclose(float(reward), stats["reward"], rtol=1e-4, atol=1e-5)
+
+
+def test_oracle_reports_queue_stats():
+    state, net = scenario()
+    ctrl = GraphEdgeController(net=net, policy="lyapunov")
+    env, _ = make_env_and_scene(state, net, ctrl)
+    stats = run_lyapunov(env)
+    assert stats["queue_final"].shape == (env.m,)
+    assert stats["queue_max"] >= float(stats["queue_final"].max())
+    for key in ("system_cost", "t_all", "i_all", "cross_bits"):
+        assert key in stats
+
+
+# -- virtual-queue boundedness ------------------------------------------------
+
+def test_queues_bounded_over_100_step_rollout():
+    """100 placements: the largest backlog any virtual queue ever reaches
+    stays O(1) — nowhere near the trivial O(num_steps) drift bound."""
+    rng = np.random.default_rng(42)
+    state = random_scenario(rng, 110, 100, 300)
+    net = costs.default_network(rng, 110, 4)
+    ctrl = GraphEdgeController(net=net, policy="lyapunov")
+    _, scene = make_env_and_scene(state, net, ctrl)
+    assert int(scene.num_steps) >= 100
+    _, _, q_final, q_max = jax.jit(lyapunov_scan)(scene)
+    assert float(q_max) < 3.0
+    assert float(q_max) < 0.1 * int(scene.num_steps)
+    assert (np.asarray(q_final) >= 0).all()
+
+
+def test_v_zero_balances_by_capacity_share():
+    """V = 0 ignores cost entirely: placements track the servers' fair
+    capacity shares, so final loads are near-proportional to capacity."""
+    rng = np.random.default_rng(7)
+    state = random_scenario(rng, 64, 60, 180)
+    net = costs.default_network(rng, 64, 4)
+    ctrl = GraphEdgeController(net=net, policy="lyapunov")
+    _, scene = make_env_and_scene(state, net, ctrl)
+    assign, _, _, _ = lyapunov_scan(scene, v_weight=0.0)
+    a = np.asarray(assign)
+    load = np.bincount(a[a >= 0], minlength=4).astype(float)
+    share = np.asarray(scene.caps) / float(np.asarray(scene.caps).sum())
+    np.testing.assert_allclose(load / load.sum(), share, atol=0.05)
+
+
+# -- controller / engine round-trips ------------------------------------------
+
+def test_controller_step_valid_and_exact_cost():
+    state, net = scenario(seed=5, users=18)
+    d = GraphEdgeController(net=net, policy="lyapunov").step(state)
+    active = np.asarray(state.mask) > 0
+    assert ((d.servers[active] >= 0) & (d.servers[active] < 3)).all()
+    assert (d.servers[~active] == -1).all()
+    w = costs.assignment_onehot(jnp.asarray(d.servers), 3)
+    sc = costs.system_cost(net, state, w)
+    assert np.isclose(float(d.cost.c), float(sc.c))
+    for key in ("system_cost", "t_all", "i_all", "cross_bits"):
+        assert key in d.assignment.stats
+
+
+def test_policy_call_surface_matches_step():
+    """The OffloadPolicy __call__(env) surface and the controller's jitted
+    dispatch produce the same assignment."""
+    state, net = scenario(seed=6)
+    ctrl = GraphEdgeController(net=net, policy="lyapunov")
+    d = ctrl.step(state)
+    env = ctrl.make_env(state)
+    a = get_offload_policy("lyapunov")(env)
+    np.testing.assert_array_equal(a.servers, d.servers)
+    assert np.isclose(a.reward, d.assignment.reward, rtol=1e-5)
+
+
+def test_empty_scene_all_inactive():
+    state, net = scenario(users=2)
+    empty = remove_users(state, jnp.ones(state.capacity, jnp.float32))
+    d = GraphEdgeController(net=net, policy="lyapunov").step(empty)
+    assert (d.servers == -1).all()
+    assert d.assignment.reward == 0.0
+
+
+def test_serving_engine_roundtrip():
+    """lyapunov decisions drive the pipelined engine; outputs match the
+    single-device oracle across a perturbed request stream."""
+    from jax.sharding import Mesh
+
+    from repro.gnn.layers import gcn_apply, gcn_init
+    from repro.serve import ServeRequest, ServingEngine
+
+    rng = np.random.default_rng(0)
+    capacity = 20
+    state = random_scenario(rng, capacity, 16, 48)
+    net = costs.default_network(rng, capacity, 3)
+    params = gcn_init(jax.random.PRNGKey(0), [8, 6, 4])
+    mesh = Mesh(np.array(jax.devices()[:1]), ("servers",))
+    engine = ServingEngine(
+        controller=GraphEdgeController(net=net, policy="lyapunov"),
+        params=params, mesh=mesh, num_devices=1)
+    reqs = []
+    for t in range(3):
+        if t:
+            state = perturb_scenario(rng, state, 0.3)
+        x = rng.normal(size=(capacity, 8)).astype(np.float32)
+        reqs.append(ServeRequest(state, x))
+    for res in engine.serve(reqs):
+        st = res.request.state
+        oracle = np.asarray(gcn_apply(params, jnp.asarray(res.request.x),
+                                      st.adj, st.mask))
+        served = np.nonzero(np.asarray(st.mask) > 0)[0]
+        assert np.abs(res.output[served] - oracle[served]).max() < 1e-4
+
+
+# -- the traced end-to-end scan (PR 4-style zero-numpy test) ------------------
+
+def test_jit_step_fn_traced_scan_rollout():
+    """partition → lyapunov scan → cost traces as one XLA computation
+    (any numpy round-trip would raise a TracerError) and matches eager."""
+    state, net = scenario(seed=8, users=14)
+    ctrl = GraphEdgeController(net=net, policy="lyapunov",
+                               partitioner="hicut_jax")
+    fn = ctrl.jit_step_fn()
+    rng = np.random.default_rng(9)
+    states = [state]
+    for _ in range(2):
+        states.append(perturb_scenario(rng, states[-1], 0.3))
+    stacked = stack_states(states)
+
+    @jax.jit
+    def roll(sts):
+        def body(carry, st):
+            res = fn(st)
+            return carry + res.cost.c, res.servers
+        return jax.lax.scan(body, jnp.zeros(()), sts)
+
+    total, servers = roll(stacked)
+    eager = [ctrl.step(s) for s in states]
+    assert np.isclose(float(total),
+                      sum(float(d.cost.c) for d in eager), rtol=1e-5)
+    for i, d in enumerate(eager):
+        np.testing.assert_array_equal(np.asarray(servers[i]), d.servers)

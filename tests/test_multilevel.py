@@ -1,0 +1,234 @@
+"""Multilevel METIS-style partitioner (repro.core.multilevel): matching /
+contraction invariants, validity + capacity properties, cut quality vs the
+mincut baseline on seeded planted-community sweeps, the jnp refinement
+twin (JitPartitioner), and the round-trip through the controller and the
+serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costs
+from repro.core.api import (GraphEdgeController, JitPartitioner,
+                            get_partitioner, state_edges)
+from repro.core.dynamic_graph import random_scenario
+from repro.core.hicut import cut_metrics
+from repro.core.multilevel import (contract, heavy_edge_matching,
+                                   multilevel_jax, multilevel_partition)
+
+
+def planted_graph(rng, n, k=4, deg_in=6, cross_frac=0.08):
+    """Random graph with k balanced planted communities: ~deg_in/2 · n
+    intra-community edges plus a cross_frac fraction of cross edges."""
+    com = np.repeat(np.arange(k), n // k)
+    com = np.concatenate([com, rng.integers(0, k, n - len(com))])
+    rng.shuffle(com)
+    have = set()
+    target_in = n * deg_in // 2
+    tries = 0
+    while len(have) < target_in and tries < 50 * target_in:
+        tries += 1
+        i = int(rng.integers(n))
+        peers = np.nonzero(com == com[i])[0]
+        j = int(rng.choice(peers))
+        if i != j:
+            have.add((min(i, j), max(i, j)))
+    n_cross, added, tries = int(len(have) * cross_frac), 0, 0
+    while added < n_cross and tries < 50 * max(n_cross, 1):
+        tries += 1
+        i, j = int(rng.integers(n)), int(rng.integers(n))
+        if i != j and com[i] != com[j] and (min(i, j), max(i, j)) not in have:
+            have.add((min(i, j), max(i, j)))
+            added += 1
+    return np.array(sorted(have), np.int64), com
+
+
+# -- coarsening building blocks ----------------------------------------------
+
+def test_heavy_edge_matching_is_a_matching():
+    rng = np.random.default_rng(0)
+    edges, _ = planted_graph(rng, 80)
+    w = rng.uniform(1, 10, len(edges))
+    match = heavy_edge_matching(80, edges, w)
+    # involution: partners point at each other, singletons at themselves
+    np.testing.assert_array_equal(match[match], np.arange(80))
+    # matched pairs are actual edges
+    adj = set(map(tuple, edges))
+    for v in range(80):
+        if match[v] != v:
+            i, j = min(v, match[v]), max(v, match[v])
+            assert (i, j) in adj
+    # uniform-weight graphs must not stall (the jittered-tie regression)
+    m1 = heavy_edge_matching(80, edges, np.ones(len(edges)))
+    assert (m1 != np.arange(80)).sum() // 2 > 80 // 8
+
+
+def test_heavy_edges_matched_first():
+    # path 0-1-2-3 with one heavy middle edge: (1,2) must be matched
+    edges = np.array([[0, 1], [1, 2], [2, 3]])
+    match = heavy_edge_matching(4, edges, np.array([1.0, 100.0, 1.0]))
+    assert match[1] == 2 and match[2] == 1
+
+
+def test_contract_conserves_weight():
+    rng = np.random.default_rng(1)
+    edges, _ = planted_graph(rng, 60)
+    w = rng.uniform(1, 5, len(edges))
+    vwgt = np.ones(60)
+    match = heavy_edge_matching(60, edges, w)
+    n_c, cmap, ce, cw, cv = contract(60, edges, w, vwgt, match)
+    assert cv.sum() == 60                       # vertex weight conserved
+    assert n_c == len(np.unique(cmap))
+    # edge weight between distinct clusters is conserved
+    cross = cmap[edges[:, 0]] != cmap[edges[:, 1]]
+    np.testing.assert_allclose(cw.sum(), w[cross].sum())
+    assert (ce[:, 0] != ce[:, 1]).all()         # no self loops
+
+
+# -- validity + capacity ------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_partition_valid_and_capacity_respecting(seed):
+    rng = np.random.default_rng(seed)
+    users = 24 + seed * 12
+    state = random_scenario(rng, users + 8, users, 3 * users)
+    part = get_partitioner("multilevel")(state)
+    active = np.asarray(state.mask) > 0
+    sub = part.subgraph
+    assert ((sub[active] >= 0) & (sub[active] < 4)).all()
+    assert (sub[~active] == -1).all()
+    cap = int(np.ceil(active.sum() / 4 * 1.1))
+    assert np.bincount(sub[active], minlength=4).max() <= cap
+
+
+def test_registry_kwargs_and_num_parts():
+    rng = np.random.default_rng(2)
+    state = random_scenario(rng, 40, 36, 100)
+    part = get_partitioner("multilevel", num_parts=3)(state)
+    active = np.asarray(state.mask) > 0
+    assert set(np.unique(part.subgraph[active])) <= {0, 1, 2}
+    cap = int(np.ceil(active.sum() / 3 * 1.1))
+    assert np.bincount(part.subgraph[active], minlength=3).max() <= cap
+
+
+# -- cut quality vs the mincut baseline ---------------------------------------
+
+def test_cut_cost_beats_mincut_on_planted_sweep():
+    """On the seeded planted-community sweep the multilevel cut must be
+    no worse than the pairwise max-flow baseline, seed for seed."""
+    from repro.core.mincut_baseline import pairwise_mincut_partition
+    totals = np.zeros(2)
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        n = 60 + seed * 12
+        edges, _ = planted_graph(rng, n)
+        w = rng.integers(1, 101, len(edges))
+        ml = multilevel_partition(n, edges, 4, seed=seed)
+        mc = pairwise_mincut_partition(n, edges, w, 4, seed=seed)
+        c_ml = cut_metrics(n, edges, ml)["cross_edges"]
+        c_mc = cut_metrics(n, edges, mc)["cross_edges"]
+        assert c_ml <= c_mc, (seed, c_ml, c_mc)
+        totals += (c_ml, c_mc)
+    assert totals[0] < totals[1]       # and strictly better in aggregate
+
+
+def test_recovers_planted_communities():
+    """With balanced planted communities the pipeline should land at (or
+    very near) the planted cut."""
+    rng = np.random.default_rng(3)
+    edges, com = planted_graph(rng, 96)
+    ml = multilevel_partition(96, edges, 4, seed=3)
+    c_ml = cut_metrics(96, edges, ml)["cross_edges"]
+    c_planted = cut_metrics(96, edges, com)["cross_edges"]
+    assert c_ml <= 1.5 * c_planted + 2
+
+
+# -- jnp refinement twin (JitPartitioner) -------------------------------------
+
+def test_multilevel_jax_registry_and_jit_parity():
+    rng = np.random.default_rng(4)
+    state = random_scenario(rng, 36, 30, 90)
+    p = get_partitioner("multilevel_jax")
+    assert isinstance(p, JitPartitioner)
+    part = p(state)
+    active = np.asarray(state.mask) > 0
+    sub = part.subgraph
+    assert ((sub[active] >= 0) & (sub[active] < 4)).all()
+    assert (sub[~active] == -1).all()
+    cap = int(np.ceil(active.sum() / 4 * 1.1))
+    assert np.bincount(sub[active], minlength=4).max() <= cap
+    # the eager __call__ and the traceable cut() are the same function
+    jitted = np.asarray(jax.jit(p.cut)(state))
+    np.testing.assert_array_equal(jitted, sub)
+
+
+def test_multilevel_jax_refinement_improves_cut():
+    rng = np.random.default_rng(5)
+    state = random_scenario(rng, 48, 44, 140)
+    edges = state_edges(state)
+    no_ref = np.asarray(multilevel_jax(state.adj, state.mask, 4, 0))
+    refined = np.asarray(multilevel_jax(state.adj, state.mask, 4, 96))
+    c0 = cut_metrics(48, edges, no_ref)["cross_edges"]
+    c1 = cut_metrics(48, edges, refined)["cross_edges"]
+    assert c1 <= c0
+    assert c1 < c0        # the sweep must actually move something here
+
+
+def test_multilevel_jax_empty_mask():
+    adj = jnp.zeros((8, 8))
+    mask = jnp.zeros(8)
+    out = np.asarray(multilevel_jax(adj, mask, 4, 8))
+    assert (out == -1).all()
+
+
+# -- round-trips through the stack -------------------------------------------
+
+@pytest.mark.parametrize("name", ["multilevel", "multilevel_jax"])
+def test_controller_step_roundtrip(name):
+    rng = np.random.default_rng(6)
+    state = random_scenario(rng, 24, 20, 60)
+    net = costs.default_network(rng, 24, 3)
+    d = GraphEdgeController(net=net, policy="greedy",
+                            partitioner=name).step(state)
+    active = np.asarray(state.mask) > 0
+    assert ((d.servers[active] >= 0) & (d.servers[active] < 3)).all()
+    w = costs.assignment_onehot(jnp.asarray(d.servers), 3)
+    sc = costs.system_cost(net, state, w)
+    assert np.isclose(float(d.cost.c), float(sc.c))
+
+
+def test_jit_step_fn_with_multilevel_jax():
+    """multilevel_jax + greedy_jit trace end to end and match the eager
+    controller step (same cut function on both paths)."""
+    rng = np.random.default_rng(7)
+    state = random_scenario(rng, 20, 16, 40)
+    net = costs.default_network(rng, 20, 3)
+    ctrl = GraphEdgeController(net=net, policy="greedy_jit",
+                               partitioner="multilevel_jax")
+    res = jax.jit(ctrl.jit_step_fn())(state)
+    eager = ctrl.step(state)
+    np.testing.assert_array_equal(np.asarray(res.servers), eager.servers)
+    np.testing.assert_array_equal(np.asarray(res.subgraph),
+                                  eager.partition.subgraph)
+    assert np.isclose(float(res.cost.c), float(eager.cost.c), rtol=1e-6)
+
+
+def test_serving_roundtrip_single_device():
+    """multilevel decision → sparse plan → distributed forward == oracle."""
+    from jax.sharding import Mesh
+
+    from repro.gnn.distributed import distributed_gcn_forward
+    from repro.gnn.layers import gcn_apply, gcn_init
+    rng = np.random.default_rng(0)
+    state = random_scenario(rng, 12, 12, 20)
+    net = costs.default_network(rng, 12, 3)
+    d = GraphEdgeController(net=net, policy="greedy",
+                            partitioner="multilevel").step(state)
+    plan = d.to_partition_plan(num_devices=1)
+    params = gcn_init(jax.random.PRNGKey(0), [8, 6, 4])
+    x = rng.normal(size=(12, 8)).astype(np.float32)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("servers",))
+    out = distributed_gcn_forward(mesh, "servers", plan, params, x)
+    oracle = np.asarray(gcn_apply(params, jnp.asarray(x), state.adj,
+                                  state.mask))
+    np.testing.assert_allclose(out, oracle[:out.shape[0]], atol=1e-5)

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
-"""Docs lane: keep README.md / DESIGN.md snippets honest.
+"""Docs lane: keep README.md / DESIGN.md / BENCHMARKS.md snippets honest.
 
-Two checks, stdlib-only (no jax/numpy needed, so CI can run it without
+Four checks, stdlib-only (no jax/numpy needed, so CI can run it without
 installing the stack):
 
 * every fenced ``python`` block must at least *compile* (syntax-valid
@@ -10,7 +10,17 @@ installing the stack):
   ``-m`` module inside this repo must point at an existing file, and every
   ``--flag`` it passes must appear verbatim in that file's source (i.e. in
   an ``add_argument`` call) — so quickstart commands cannot drift from the
-  CLIs.
+  CLIs;
+* the entry-point table in ``src/repro/launch/__init__.py`` must list only
+  modules that exist, every ``--flag`` a row mentions must exist in that
+  module, and every launch module that defines ``main()`` must have a
+  table row — so the table cannot drift from the launchers;
+* every name the docs present as a registry entry (first column of the
+  "registry name" tables, and ``--partitioner``/``--policy`` values in
+  shell fences) must resolve against an actual
+  ``register_partitioner("...")`` / ``register_offload_policy("...")`` /
+  ``register_policy("...")`` call site under ``src/`` — so documented
+  backends cannot drift from the registries.
 
 Run directly (exit 1 on problems) or via ``tests/test_docs.py``.
 """
@@ -22,9 +32,13 @@ import shlex
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
-DOCS = ("README.md", "DESIGN.md")
+DOCS = ("README.md", "DESIGN.md", "BENCHMARKS.md")
 FENCE = re.compile(r"```([\w+-]*)[ \t]*\n(.*?)```", re.S)
 SHELL_LANGS = {"", "sh", "bash", "shell", "console", "text"}
+LAUNCH_INIT = ROOT / "src" / "repro" / "launch" / "__init__.py"
+REGISTER_RE = re.compile(
+    r"register_(?:partitioner|offload_policy|policy)\(\s*[\"']([^\"']+)[\"']")
+NAME_RE = re.compile(r"[a-z][a-z0-9_]*\Z")   # skip placeholders like X / <n>
 
 
 def _module_path(module: str) -> pathlib.Path:
@@ -77,14 +91,119 @@ def check_command(doc: str, line: str, errors: list[str]) -> None:
                           f"{target.relative_to(ROOT)}")
 
 
+# ---------------------------------------------------------------------------
+# launch entry-point table (src/repro/launch/__init__.py docstring)
+# ---------------------------------------------------------------------------
+
+def _rel(path: pathlib.Path) -> str:
+    try:
+        return str(path.relative_to(ROOT))
+    except ValueError:
+        return str(path)
+
+
+def check_launch_table(errors: list[str]) -> None:
+    if not LAUNCH_INIT.exists():
+        errors.append(f"{_rel(LAUNCH_INIT)}: missing")
+        return
+    text = LAUNCH_INIT.read_text()
+    listed: set[str] = set()
+    for line in text.splitlines():
+        m = re.match(r"\|\s*``(\w+)``", line.strip())
+        if not m:
+            continue
+        name = m.group(1)
+        listed.add(name)
+        target = LAUNCH_INIT.parent / f"{name}.py"
+        if not target.exists():
+            errors.append(f"launch table: entry point ``{name}`` has no "
+                          f"module {_rel(target)}")
+            continue
+        src = target.read_text()
+        for flag in re.findall(r"--[\w][\w-]*", line):
+            flag = flag.rstrip("-")
+            if f'"{flag}"' not in src and f"'{flag}'" not in src:
+                errors.append(f"launch table: row ``{name}`` mentions "
+                              f"{flag}, not found in {_rel(target)}")
+    for mod in sorted(LAUNCH_INIT.parent.glob("*.py")):
+        if mod.name == "__init__.py":
+            continue
+        if re.search(r"^def main\(", mod.read_text(), re.M) and \
+                mod.stem not in listed:
+            errors.append(f"launch table: runnable module {mod.stem} "
+                          f"(defines main()) is not listed in the "
+                          f"entry-point table")
+
+
+# ---------------------------------------------------------------------------
+# registry names documented vs registered
+# ---------------------------------------------------------------------------
+
+def registered_names() -> set[str]:
+    """Every name passed to a register_* call anywhere under src/."""
+    names: set[str] = set()
+    for py in (ROOT / "src").rglob("*.py"):
+        names.update(REGISTER_RE.findall(py.read_text()))
+    return names
+
+
+_TABLE_SEP = re.compile(r"\|(?:\s*:?-+:?\s*\|)+\s*$")
+
+
+def documented_registry_names(text: str) -> set[str]:
+    """Names the docs present as registry entries: the first column of any
+    markdown table whose header contains "registry name", plus every
+    ``--partitioner``/``--policy`` value in shell fences. Table scope is
+    tracked via the ``|---|`` separator rows, so a different table stacked
+    directly underneath never leaks its cells into the name set."""
+    names: set[str] = set()
+    lines = text.splitlines()
+    in_table = False
+    for i, line in enumerate(lines):
+        stripped = line.strip()
+        if not stripped.startswith("|"):
+            in_table = False
+            continue
+        if _TABLE_SEP.match(stripped):         # the row above is a header
+            header = lines[i - 1].strip() if i else ""
+            in_table = "registry name" in header.lower()
+            continue
+        nxt = lines[i + 1].strip() if i + 1 < len(lines) else ""
+        if _TABLE_SEP.match(nxt):
+            continue                           # header row of the next table
+        if in_table:
+            cell = stripped.split("|")[1]
+            for tok in re.findall(r"`([^`]+)`", cell):
+                if NAME_RE.match(tok):
+                    names.add(tok)
+    for lang, body in FENCE.findall(text):
+        if lang.lower() in SHELL_LANGS:
+            for m in re.finditer(r"--(?:partitioner|policy)[ =](\S+)", body):
+                tok = m.group(1).strip("\"'")
+                if NAME_RE.match(tok):
+                    names.add(tok)
+    return names
+
+
+def check_registry_names(doc: str, text: str, registered: set[str],
+                         errors: list[str]) -> None:
+    for name in sorted(documented_registry_names(text)):
+        if name not in registered:
+            errors.append(f"{doc}: documented registry entry {name!r} "
+                          f"does not resolve to any register_partitioner/"
+                          f"register_offload_policy call site under src/")
+
+
 def collect_errors() -> list[str]:
     errors: list[str] = []
+    registered = registered_names()
     for doc in DOCS:
         path = ROOT / doc
         if not path.exists():
             errors.append(f"{doc}: missing")
             continue
-        for lang, body in FENCE.findall(path.read_text()):
+        text = path.read_text()
+        for lang, body in FENCE.findall(text):
             if lang == "python":
                 try:
                     compile(body, f"{doc}:<fenced python>", "exec")
@@ -94,6 +213,8 @@ def collect_errors() -> list[str]:
             elif lang.lower() in SHELL_LANGS:
                 for line in iter_commands(body):
                     check_command(doc, line, errors)
+        check_registry_names(doc, text, registered, errors)
+    check_launch_table(errors)
     return errors
 
 
@@ -102,7 +223,7 @@ def main() -> int:
     for err in errors:
         print(f"ERROR: {err}", file=sys.stderr)
     if not errors:
-        print(f"docs OK: {', '.join(DOCS)}")
+        print(f"docs OK: {', '.join(DOCS)} + launch table + registries")
     return 1 if errors else 0
 
 
