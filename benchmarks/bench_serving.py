@@ -20,6 +20,22 @@ from both arms), outputs are cross-checked against the single-device
 cache counters) so the perf trajectory — and the ≥2× acceptance bar — is
 tracked across PRs. The CI serving smoke lane fails if the engine is
 slower than the sequential loop or diverges from the oracle.
+
+The file also carries the **streaming front-end records** (``"mode":
+"streaming"`` — DESIGN.md §7, BENCHMARKS.md):
+
+* ``burst_batchable`` — a burst of concurrent requests on one topology,
+  served once with continuous batching (``max_batch`` ≥ 4) and once
+  per-request (``max_batch=1``) through the same warm engine; the batched
+  arm must clear the **≥2× throughput** acceptance bar, and every
+  streamed output is checked against the no-frontend ``engine.serve``
+  sequential oracle.
+* ``overload_lyapunov`` / ``overload_admit_all`` — an open-loop Poisson
+  stream far above service capacity with per-request deadlines; the
+  Lyapunov arm must keep the *admitted* p99 bounded (CI gates
+  ``p99 ≤ 2 × deadline``) with every shed request accounted
+  (conservation), while the admit-all contrast arm shows the unbounded
+  tail admission control removes.
 """
 from __future__ import annotations
 
@@ -72,6 +88,143 @@ def _sequential_pass(net, requests, mesh, params, devices):
         outs.append(distributed_gcn_forward(mesh, "servers", plan, params,
                                             req.x))
     return outs
+
+
+def _streaming_records(quick, mesh, devices) -> list:
+    """The streaming front-end arms (``"mode": "streaming"`` records)."""
+    import time as _time
+
+    import jax
+
+    from repro.core import costs
+    from repro.core.api import GraphEdgeController
+    from repro.core.dynamic_graph import random_scenario
+    from repro.gnn.layers import gcn_init
+    from repro.serve import (AdmitAll, LyapunovAdmission, ServeRequest,
+                             ServingEngine, StreamRequest, StreamingFrontend,
+                             poisson_workload)
+
+    users = 64 if quick else 128
+    capacity = users + 8
+    n_burst = 16 if quick else 32
+    max_batch = 8
+    rng = np.random.default_rng(1)
+    net = costs.default_network(rng, capacity, 4)
+    params = gcn_init(jax.random.PRNGKey(1), [FEATURES, HIDDEN, CLASSES])
+    state = random_scenario(rng, capacity, users, 3 * users)
+    xs = [rng.normal(size=(capacity, FEATURES)).astype(np.float32)
+          for _ in range(n_burst)]
+
+    def make_engine():
+        return ServingEngine(
+            controller=GraphEdgeController(net=net, policy="greedy_jit"),
+            params=params, mesh=mesh, num_devices=devices)
+
+    def burst():
+        return [(0.0, StreamRequest(state, x, tenant=i % 2))
+                for i, x in enumerate(xs)]
+
+    # -- no-frontend sequential oracle (the parity reference) ----------------
+    oracle_engine = make_engine()
+    seq_outs = [r.output for r in oracle_engine.serve_all(
+        [ServeRequest(state, x) for x in xs])]
+    mask_rows = np.nonzero(np.asarray(state.mask) > 0)[0]
+
+    def run_arm(mb):
+        """One timed burst pass at batch cap ``mb`` on a pre-warmed engine
+        (compile/trace excluded, plan cache warm — steady-state serving)."""
+        eng = make_engine()
+        StreamingFrontend(engine=eng, queue_depth=n_burst + 8,
+                          max_batch=mb).run(burst())          # warmup
+        fe = StreamingFrontend(engine=eng, queue_depth=n_burst + 8,
+                               max_batch=mb)
+        t0 = _time.perf_counter()
+        results = fe.run(burst())
+        dt = _time.perf_counter() - t0
+        err = max(float(np.abs(r.output[mask_rows]
+                               - seq_outs[r.rid][mask_rows]).max())
+                  for r in results)
+        return fe, len(results) / dt, err
+
+    fe1, base_rps, err1 = run_arm(1)
+    feb, batch_rps, errb = run_arm(max_batch)
+    records = [{
+        "mode": "streaming", "workload": "burst_batchable",
+        "users": users, "capacity": capacity, "devices": devices,
+        "requests": n_burst, "max_batch": max_batch,
+        "baseline_rps": base_rps, "batched_rps": batch_rps,
+        "batch_speedup": batch_rps / base_rps,
+        "batches": feb.stats.batches,
+        "batched_requests": feb.stats.batched_requests,
+        "parity_vs_engine_max_err": max(err1, errb),
+        "conservation_ok": bool(fe1.stats.conservation_ok
+                                and feb.stats.conservation_ok),
+    }]
+    emit(f"streaming_burst_u{users}", 1e6 / batch_rps,
+         f"batched_rps={batch_rps:.2f};baseline_rps={base_rps:.2f};"
+         f"batch_speedup={batch_rps / base_rps:.1f}x;"
+         f"max_err={max(err1, errb):.1e}")
+
+    # -- overload: open-loop Poisson far above capacity, with deadlines ------
+    # Timed on a ManualClock (every clock read = 20 logical ms) so "service
+    # capacity" is simulated and the overload regime — and therefore the CI
+    # gate on the admitted p99 — is deterministic across machines. The
+    # forwards still run for real; only the tick arithmetic is logical.
+    from repro.serve import ManualClock
+
+    deadline = 0.5                    # logical SLO budget (lyapunov arm)
+    count = 60 if quick else 120
+    rate = 100.0                      # logical arrivals/sec >> service rate
+    tenants = 3
+    queue_depth = 16                  # shallow: overflow → queue_full
+
+    def overload_arm(admission, name, slo_budget):
+        eng = make_engine()
+        StreamingFrontend(engine=eng, queue_depth=count,
+                          max_batch=max_batch).run(burst())   # warm compiles
+        fe = StreamingFrontend(engine=eng, queue_depth=queue_depth,
+                               max_batch=max_batch, admission=admission,
+                               clock=ManualClock(tick_per_now=0.02))
+        wl_rng = np.random.default_rng(2)
+        fe.run(poisson_workload(
+            wl_rng, rate, count,
+            lambda i: StreamRequest(state, xs[i % n_burst],
+                                    tenant=i % tenants,
+                                    deadline=slo_budget)))
+        stats, slo = fe.stats.as_dict(), fe.slo_summary()
+        rec = {
+            "mode": "streaming", "workload": name, "clock": "manual",
+            "users": users, "capacity": capacity, "devices": devices,
+            "requests": count, "arrival_rate": rate, "tenants": tenants,
+            "deadline": slo_budget, "queue_depth": queue_depth,
+            "max_batch": max_batch,
+            "admitted": stats["admitted"],
+            "rejected": stats["rejected"],
+            "rejected_total": stats["rejected_total"],
+            "deferred": stats["deferred"],
+            "conservation_ok": stats["conservation_ok"],
+            "sustained_rps": slo.get("sustained_rps", 0.0),
+            "admitted_p50_s": slo.get("total", {}).get("p50"),
+            "admitted_p99_s": slo.get("total", {}).get("p99"),
+        }
+        if name == "overload_lyapunov":
+            rec["tenant_queue_max"] = admission.queue_max
+        emit(f"streaming_{name}_u{users}",
+             (rec["admitted_p99_s"] or 0.0) * 1e6,
+             f"admitted={rec['admitted']}/{count};"
+             f"rejected={rec['rejected_total']};"
+             f"p99_s={rec['admitted_p99_s']:.3f};"
+             f"conservation={'ok' if rec['conservation_ok'] else 'BAD'}")
+        return rec
+
+    # lyapunov enforces the SLO budget; the admit-all contrast arm runs the
+    # same stream best-effort (no deadlines, no control) and shows the
+    # unbounded latency tail admission control removes
+    records.append(overload_arm(
+        LyapunovAdmission(num_tenants=tenants), "overload_lyapunov",
+        deadline))
+    records.append(overload_arm(AdmitAll(), "overload_admit_all", None))
+    return records
 
 
 def run(quick: bool = True) -> None:
@@ -144,6 +297,7 @@ def run(quick: bool = True) -> None:
              f"speedup={rec['speedup']:.1f}x;"
              f"max_err={eng_err:.1e}")
 
+    records.extend(_streaming_records(quick, mesh, devices))
     write_bench_json(OUT_JSON, "serving", quick, records)
 
 

@@ -26,6 +26,29 @@ def git_describe() -> str:
         return "unknown"
 
 
+def warn_stale_benches(root: pathlib.Path | None = None) -> list[str]:
+    """Warn (loudly, on stdout with the ``#`` CSV-comment prefix) for every
+    checked-in ``BENCH_*.json`` whose stamped ``git`` describe no longer
+    matches the current tree — i.e. numbers generated at an older commit.
+    The ``-dirty`` suffix is ignored: only the base hash must match.
+    Returns the stale file names so callers/tests can assert on them."""
+    here = git_describe().removesuffix("-dirty")
+    if here == "unknown":
+        return []
+    root = root or pathlib.Path(__file__).resolve().parent.parent
+    stale = []
+    for path in sorted(root.glob("BENCH_*.json")):
+        try:
+            stamped = json.loads(path.read_text()).get("git", "unknown")
+        except (OSError, json.JSONDecodeError):
+            stamped = "unreadable"
+        if stamped.removesuffix("-dirty") != here:
+            stale.append(path.name)
+            print(f"# WARNING: {path.name} stamped {stamped!r} but the "
+                  f"tree is {here!r} — stale numbers, regenerate")
+    return stale
+
+
 def write_bench_json(path: str, bench: str, quick: bool, records: list,
                      **extra) -> None:
     """Write a ``BENCH_*.json`` with the common schema header: every file

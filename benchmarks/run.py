@@ -30,6 +30,8 @@ def main() -> None:
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+    from benchmarks.common import warn_stale_benches
+    warn_stale_benches()   # flag BENCH_*.json stamped at an older commit
     t0 = time.time()
     from benchmarks import (bench_ablation, bench_backends,
                             bench_convergence, bench_distributed_gnn,

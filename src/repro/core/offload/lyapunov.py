@@ -54,6 +54,17 @@ from repro.core.offload.env import OffloadEnv
 DEFAULT_V = 1.0   # drift-plus-penalty trade-off of the registered policy
 
 
+def virtual_queue_update(q, arrival, service, xp=jnp):
+    """The Lyapunov virtual-queue recursion ``Q ← max(Q + a − μ, 0)``.
+
+    The one update rule shared by every drift-plus-penalty consumer in the
+    repo: the per-server scheduler below (jnp scan + numpy oracle) and the
+    per-tenant admission controller of the streaming serving front-end
+    (:class:`repro.serve.frontend.LyapunovAdmission`). ``xp`` selects the
+    array module (``jnp`` for traced code, ``np`` for host-side walks)."""
+    return xp.maximum(q + arrival - service, 0.0)
+
+
 def _marginal_cost_all(scene: EnvScene, es, i) -> jnp.ndarray:
     """[M] marginal cost of hosting the current user on every server."""
     m = scene.f_k.shape[0]
@@ -87,7 +98,7 @@ def lyapunov_scan(scene: EnvScene, v_weight=DEFAULT_V):
         valid = (es.t < scene.num_steps).astype(jnp.float32)
         es, _, rew, _, _ = env_step(scene, es, _force_server_jnp(m, k))
         arrival = jnp.zeros((m,), jnp.float32).at[k].set(valid)
-        q = jnp.maximum(q + arrival - mu * valid, 0.0)
+        q = virtual_queue_update(q, arrival, mu * valid)
         return (es, q), (rew.sum(), q.max())
 
     init = (env_reset(scene), jnp.zeros((m,), jnp.float32))
@@ -159,7 +170,7 @@ def run_lyapunov(env: OffloadEnv, v_weight: float = DEFAULT_V) -> dict:
         total_r += float(rew.sum())
         arrival = np.zeros(m, np.float32)
         arrival[k] = 1.0
-        q = np.maximum(q + arrival - mu, 0.0)
+        q = virtual_queue_update(q, arrival, mu, xp=np)
         q_max = max(q_max, float(q.max()))
     stats = _episode_stats(env, total_r)
     stats["queue_final"] = q

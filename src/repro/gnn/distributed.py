@@ -113,6 +113,29 @@ class PartitionPlan:
         out[self.perm[valid]] = flat[valid]
         return out
 
+    def scatter_batch(self, xs, pad_to: int | None = None) -> np.ndarray:
+        """Stack B global [N, F] arrays into the batched-forward layout
+        [P, B', L, F] (device-major, so the mesh sharding spec is the same
+        as the single-request path). ``pad_to`` zero-pads the batch axis to
+        a fixed bucket size so batch shapes — and therefore jit compiles —
+        stay bounded."""
+        b = len(xs) if pad_to is None else int(pad_to)
+        assert b >= len(xs), (b, len(xs))
+        blocks = [self.scatter(np.asarray(x, np.float32)) for x in xs]
+        out = np.zeros((self.num_devices, b) + blocks[0].shape[1:],
+                       np.float32)
+        for i, blk in enumerate(blocks):
+            out[:, i] = blk
+        return out
+
+    def gather_batch(self, blocks: np.ndarray, count: int | None = None
+                     ) -> list[np.ndarray]:
+        """[P, B', L, ...] → ``count`` global [N, ...] arrays (padded batch
+        slots beyond ``count`` are dropped)."""
+        blocks = np.asarray(blocks)
+        count = blocks.shape[1] if count is None else int(count)
+        return [self.gather(blocks[:, i]) for i in range(count)]
+
 
 def make_partition_plan_sparse(edges: np.ndarray, assign: np.ndarray,
                                num_devices: int, n: int | None = None,
@@ -343,6 +366,18 @@ def _plan_consts(plan: PartitionPlan, aggregate: str):
     return jnp.asarray(dinv), jnp.asarray(cs_ext), agg_args
 
 
+def _device_layers(x_blk, sidx, smask, rs, cs_e, mask_blk, a_args, ws_,
+                   agg_fn, axis: str):
+    """The per-device multi-layer GCN body shared by the single-request and
+    batched forwards: x_blk [L, F_in] → masked [L, F_out]."""
+    h = x_blk
+    for i, w in enumerate(ws_):
+        h = agg_fn(h @ w, *a_args, sidx, smask, rs, cs_e, axis)
+        if i < len(ws_) - 1:
+            h = jax.nn.relu(h)
+    return h * mask_blk[:, None]
+
+
 @partial(jax.jit, static_argnames=("mesh", "axis", "aggregate"))
 def _forward_blocks(mesh: Mesh, axis: str, aggregate: str, x_blocks,
                     send_idx, send_mask, dinv, cs_ext, mask, agg_args, ws):
@@ -359,14 +394,41 @@ def _forward_blocks(mesh: Mesh, axis: str, aggregate: str, x_blocks,
         x_blk, sidx, smask = x_blk[0], sidx[0], smask[0]
         rs, cs_e, mask_blk = rs[0], cs_e[0], mask_blk[0]
         a_args = tuple(a[0] for a in a_args)
-        h = x_blk
-        for i, w in enumerate(ws_):
-            h = agg_fn(h @ w, *a_args, sidx, smask, rs, cs_e, axis)
-            if i < len(ws_) - 1:
-                h = jax.nn.relu(h)
-        return (h * mask_blk[:, None])[None]
+        return _device_layers(x_blk, sidx, smask, rs, cs_e, mask_blk,
+                              a_args, ws_, agg_fn, axis)[None]
 
     specs_in = (P(axis),) * 7 + (P(),)       # agg_args sharded, ws replicated
+    fn = shard_map(device_fn, mesh=mesh, in_specs=specs_in,
+                   out_specs=P(axis), check_rep=False)
+    return fn(x_blocks, send_idx, send_mask, dinv, cs_ext, mask, agg_args,
+              ws)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "aggregate"))
+def _forward_blocks_batched(mesh: Mesh, axis: str, aggregate: str, x_blocks,
+                            send_idx, send_mask, dinv, cs_ext, mask,
+                            agg_args, ws):
+    """Batched twin of :func:`_forward_blocks`: ``x_blocks`` is
+    [P, B, L, F] (device-major so the sharding spec is unchanged) and every
+    batch element runs the same plan's forward — the halo all-gather and
+    the per-device aggregation are vmapped over B *inside* the shard_map
+    body, so B concurrent requests on one cached plan cost a single XLA
+    dispatch and one collective stream instead of B. The jit cache is
+    keyed on shapes, so each batch-size bucket compiles once."""
+    agg_fn = _halo_aggregate if aggregate == "dense" else \
+        _halo_aggregate_sparse
+
+    def device_fn(x_bb, sidx, smask, rs, cs_e, mask_blk, a_args, ws_):
+        x_bb, sidx, smask = x_bb[0], sidx[0], smask[0]     # [B, L, F]
+        rs, cs_e, mask_blk = rs[0], cs_e[0], mask_blk[0]
+        a_args = tuple(a[0] for a in a_args)
+
+        def one(x_blk):
+            return _device_layers(x_blk, sidx, smask, rs, cs_e, mask_blk,
+                                  a_args, ws_, agg_fn, axis)
+        return jax.vmap(one)(x_bb)[None]
+
+    specs_in = (P(axis),) * 7 + (P(),)
     fn = shard_map(device_fn, mesh=mesh, in_specs=specs_in,
                    out_specs=P(axis), check_rep=False)
     return fn(x_blocks, send_idx, send_mask, dinv, cs_ext, mask, agg_args,
@@ -395,6 +457,31 @@ def make_forward_fn(mesh: Mesh, axis: str, plan: PartitionPlan,
         return _forward_blocks(mesh, axis, aggregate, jnp.asarray(x_blocks),
                                send_idx, send_mask, dinv, cs_ext, mask,
                                agg_args, ws)
+    return forward
+
+
+def make_batched_forward_fn(mesh: Mesh, axis: str, plan: PartitionPlan,
+                            aggregate: str = "auto"):
+    """Plan → reusable non-blocking *batched* forward.
+
+    Same one-time prep as :func:`make_forward_fn`, but the returned
+    ``forward(x_blocks, params)`` takes [P, B, L, F] blocks
+    (``plan.scatter_batch``) and serves all B requests as one dispatch of
+    :func:`_forward_blocks_batched` — the continuous-batching hot path of
+    :class:`repro.serve.frontend.StreamingFrontend`. Each distinct B
+    compiles once; callers bound compile count by padding B to buckets."""
+    aggregate = resolve_aggregate(plan, aggregate)
+    dinv, cs_ext, agg_args = _plan_consts(plan, aggregate)
+    send_idx = jnp.asarray(plan.send_idx)
+    send_mask = jnp.asarray(plan.send_mask)
+    mask = jnp.asarray(plan.mask)
+
+    def forward(x_blocks, params):
+        ws = tuple(jnp.asarray(layer["w"]) for layer in params)
+        return _forward_blocks_batched(mesh, axis, aggregate,
+                                       jnp.asarray(x_blocks), send_idx,
+                                       send_mask, dinv, cs_ext, mask,
+                                       agg_args, ws)
     return forward
 
 

@@ -1,0 +1,171 @@
+"""Streaming serving launcher — open-loop load against the front-end.
+
+    PYTHONPATH=src python -m repro.launch.serve_stream --devices 4 \
+        --arrival-rate 50 --tenants 3 --deadline 2.0 --queue-depth 64
+
+Drives the production-shaped request front of DESIGN.md §7
+(:class:`repro.serve.StreamingFrontend` over the pipelined
+:class:`repro.serve.ServingEngine`) with an **open-loop Poisson workload**:
+``--count`` requests arrive at ``--arrival-rate`` req/s on their own
+schedule regardless of service progress, spread over ``--tenants`` tenants
+and ``--topologies`` distinct perturbed graph layouts, each carrying a
+``--deadline``-second SLO budget. The front-end queues them (bounded at
+``--queue-depth``, explicit ``queue_full`` backpressure), groups queued
+requests sharing a cached plan into continuous batches of up to
+``--max-batch``, runs the ``--admission`` controller (``lyapunov`` with
+``--v``/``--theta`` drift-plus-penalty knobs, ``static`` priority, or
+``admit_all``) and prints the SLO telemetry: per-phase
+p50/p95/p99 latency, sustained req/s, and the conservation ledger
+(admitted + rejected + deferred == submitted).
+
+Every served output is checked against the single-device ``gcn_apply``
+oracle — batched members must match the sequential result exactly.
+(Entry-point orientation: see the ``repro.launch`` package docstring.)
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.launch.serve_gnn import _ensure_virtual_devices
+
+
+def _parse_args() -> argparse.Namespace:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--users", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=0,
+                    help="graph-state capacity (0 → users + 8)")
+    ap.add_argument("--features", type=int, default=32)
+    ap.add_argument("--hidden", type=int, default=16)
+    ap.add_argument("--classes", type=int, default=5)
+    ap.add_argument("--arrival-rate", type=float, default=50.0,
+                    help="open-loop Poisson arrival rate, requests/sec")
+    ap.add_argument("--count", type=int, default=64,
+                    help="total requests injected by the workload")
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="requests round-robin over this many tenant ids")
+    ap.add_argument("--deadline", type=float, default=2.0,
+                    help="per-request SLO budget in seconds (0 → none)")
+    ap.add_argument("--queue-depth", type=int, default=64,
+                    help="bounded request queue; overflow is rejected "
+                         "with reason queue_full")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="continuous-batching cap (bucketed to powers "
+                         "of two)")
+    ap.add_argument("--topologies", type=int, default=2,
+                    help="distinct perturbed graph layouts cycled through "
+                         "the stream (each is one plan-cache entry)")
+    ap.add_argument("--admission", default="lyapunov",
+                    choices=("lyapunov", "static", "admit_all"))
+    ap.add_argument("--v", type=float, default=1.0,
+                    help="lyapunov drift-plus-penalty weight V")
+    ap.add_argument("--theta", type=float, default=8.0,
+                    help="lyapunov admission backlog bound θ")
+    ap.add_argument("--plan-cache-size", type=int, default=16)
+    ap.add_argument("--partitioner", default="hicut_jax")
+    ap.add_argument("--policy", default="greedy_jit")
+    ap.add_argument("--change-rate", type=float, default=0.2)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args()
+
+
+def _fmt_phase(name: str, block: dict) -> str:
+    return (f"  {name:<10s} p50={block['p50'] * 1e3:8.2f}ms  "
+            f"p95={block['p95'] * 1e3:8.2f}ms  "
+            f"p99={block['p99'] * 1e3:8.2f}ms  "
+            f"max={block['max'] * 1e3:8.2f}ms")
+
+
+def main() -> None:
+    args = _parse_args()
+    _ensure_virtual_devices(args.devices)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import costs
+    from repro.core.api import GraphEdgeController
+    from repro.core.dynamic_graph import perturb_scenario, random_scenario
+    from repro.gnn.layers import gcn_apply, gcn_init
+    from repro.serve import (AdmitAll, LyapunovAdmission, ServingEngine,
+                             StaticPriorityAdmission, StreamRequest,
+                             StreamingFrontend, poisson_workload)
+
+    rng = np.random.default_rng(args.seed)
+    capacity = args.capacity or args.users + 8
+    devices = min(args.devices, len(jax.devices()))
+    net = costs.default_network(rng, capacity, args.devices)
+    controller = GraphEdgeController(net=net, policy=args.policy,
+                                     partitioner=args.partitioner)
+    params = gcn_init(jax.random.PRNGKey(args.seed),
+                      [args.features, args.hidden, args.classes])
+    mesh = Mesh(np.array(jax.devices()[:devices]), ("servers",))
+    engine = ServingEngine(controller=controller, params=params, mesh=mesh,
+                           axis="servers", num_devices=devices,
+                           plan_cache_size=args.plan_cache_size)
+
+    if args.admission == "lyapunov":
+        admission = LyapunovAdmission(num_tenants=args.tenants, v=args.v,
+                                      theta=args.theta)
+    elif args.admission == "static":
+        admission = StaticPriorityAdmission()
+    else:
+        admission = AdmitAll()
+    frontend = StreamingFrontend(engine=engine,
+                                 queue_depth=args.queue_depth,
+                                 max_batch=args.max_batch,
+                                 admission=admission)
+
+    states = [random_scenario(rng, capacity, args.users, 3 * args.users)]
+    for _ in range(args.topologies - 1):
+        states.append(perturb_scenario(rng, states[-1], args.change_rate))
+    deadline = args.deadline if args.deadline > 0 else None
+
+    def make_request(i: int) -> StreamRequest:
+        x = rng.normal(size=(capacity, args.features)).astype(np.float32)
+        return StreamRequest(states[i % len(states)], x,
+                             tenant=i % args.tenants, deadline=deadline)
+
+    print(f"streaming {args.count} requests @ {args.arrival_rate} req/s "
+          f"(open loop): {args.tenants} tenants, {args.topologies} "
+          f"topologies, deadline={args.deadline}s, "
+          f"queue_depth={args.queue_depth}, max_batch={args.max_batch}, "
+          f"admission={args.admission}, {devices} mesh devices")
+    workload = poisson_workload(rng, args.arrival_rate, args.count,
+                                make_request)
+    results = frontend.run(workload)
+
+    err = 0.0
+    for res in results:
+        st = res.request.state
+        oracle = np.asarray(gcn_apply(params, jnp.asarray(res.request.x),
+                                      st.adj, st.mask))
+        served = np.nonzero(np.asarray(st.mask) > 0)[0]
+        err = max(err, float(np.abs(res.output[served] -
+                                    oracle[served]).max()))
+    assert err < 1e-4, "streamed serve diverged from the oracle"
+
+    stats = frontend.stats.as_dict()
+    summary = frontend.slo_summary()
+    print(f"served {stats['served']}/{stats['submitted']} "
+          f"(admitted={stats['admitted']}, "
+          f"rejected={stats['rejected_total']} {stats['rejected']}, "
+          f"defer_events={stats['defer_events']})  "
+          f"conservation={'ok' if stats['conservation_ok'] else 'VIOLATED'}")
+    print(f"batches={stats['batches']} "
+          f"batched_requests={stats['batched_requests']}  "
+          f"|serve - oracle|max={err:.2e}")
+    if summary.get("served"):
+        print(f"sustained {summary['sustained_rps']:.2f} req/s")
+        for phase in ("queue_wait", "decide", "forward", "total"):
+            print(_fmt_phase(phase, summary[phase]))
+    pc = engine.plan_cache_info()
+    print(f"plan cache: {pc.hits} hits / {pc.misses} misses "
+          f"({pc.currsize}/{pc.maxsize} entries)")
+    assert stats["conservation_ok"], "request accounting does not conserve"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,30 @@
-"""GraphEdge serving subsystem — the pipelined request engine.
+"""GraphEdge serving subsystem — pipelined engine + streaming front-end.
 
 ``repro.serve.engine`` turns the control plane (`repro.core.api`) plus the
 distributed forward (`repro.gnn.distributed`) into a request pipeline:
 topology-delta detection, a bounded plan cache, and async-dispatch overlap
-of the next control decision with the in-flight GNN forward. See
-DESIGN.md §5 ("Serving engine"); ``repro.launch.serve_gnn`` is the CLI.
-"""
-from repro.serve.engine import ServeRequest, ServeResult, ServingEngine
+of the next control decision with the in-flight GNN forward (DESIGN.md §5).
 
-__all__ = ["ServeRequest", "ServeResult", "ServingEngine"]
+``repro.serve.frontend`` is the production-shaped request front sitting on
+top of it: a bounded :class:`RequestQueue` with explicit backpressure,
+continuous batching of concurrent requests sharing a cached plan,
+Lyapunov drift-plus-penalty admission control per tenant, and per-request
+SLO telemetry (``repro.serve.metrics``) — DESIGN.md §7.
+``repro.launch.serve_gnn`` / ``repro.launch.serve_stream`` are the CLIs.
+"""
+from repro.serve.engine import (PlanEntry, ServeRequest, ServeResult,
+                                ServingEngine)
+from repro.serve.frontend import (AdmitAll, LyapunovAdmission, RequestQueue,
+                                  StaticPriorityAdmission, StreamRequest,
+                                  StreamResult, StreamingFrontend,
+                                  poisson_workload)
+from repro.serve.metrics import (ManualClock, MonotonicClock, RequestTiming,
+                                 summarize)
+
+__all__ = [
+    "AdmitAll", "LyapunovAdmission", "ManualClock", "MonotonicClock",
+    "PlanEntry", "RequestQueue", "RequestTiming", "ServeRequest",
+    "ServeResult", "ServingEngine", "StaticPriorityAdmission",
+    "StreamRequest", "StreamResult", "StreamingFrontend",
+    "poisson_workload", "summarize",
+]

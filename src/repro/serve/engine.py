@@ -37,7 +37,8 @@ from jax.sharding import Mesh
 from repro.core.api import (CacheInfo, Decision, GraphEdgeController,
                             LruCache, topology_key)
 from repro.core.dynamic_graph import GraphState
-from repro.gnn.distributed import PartitionPlan, make_forward_fn
+from repro.gnn.distributed import (PartitionPlan, make_batched_forward_fn,
+                                   make_forward_fn)
 
 
 @dataclass(frozen=True)
@@ -65,6 +66,17 @@ def _assignment_digest(servers: np.ndarray) -> str:
 
 
 @dataclass
+class PlanEntry:
+    """One plan-cache value: the plan, its prepared single-request forward,
+    and — built lazily, only once a continuous batch actually forms on this
+    plan — the prepared batched forward (``make_batched_forward_fn``)."""
+    key: tuple[str, str]
+    plan: PartitionPlan
+    forward: Callable
+    batched: Callable | None = None
+
+
+@dataclass
 class ServingEngine:
     """Controller + mesh + params → pipelined request server.
 
@@ -86,8 +98,7 @@ class ServingEngine:
         self._plan_cache = LruCache(self.plan_cache_size)
 
     # -- control + plan stage ------------------------------------------------
-    def _plan_for(self, decision: Decision
-                  ) -> tuple[PartitionPlan, Callable, bool]:
+    def _plan_for(self, decision: Decision) -> tuple[PlanEntry, bool]:
         """Plan + prepared forward for a decision, through the LRU cache.
 
         Keyed on (topology fingerprint, assignment digest): the plan is a
@@ -98,18 +109,37 @@ class ServingEngine:
         key = (topo, _assignment_digest(decision.servers))
         hit = self._plan_cache.get(key)
         if hit is not None:
-            return hit[0], hit[1], True
+            return hit, True
         plan = decision.to_partition_plan(self.num_devices)
         forward = make_forward_fn(self.mesh, self.axis, plan, self.aggregate)
-        self._plan_cache.put(key, (plan, forward))
-        return plan, forward, False
+        entry = PlanEntry(key, plan, forward)
+        self._plan_cache.put(key, entry)
+        return entry, False
+
+    def decide_entry(self, state: GraphState
+                     ) -> tuple[Decision, PlanEntry, bool]:
+        """The full control stage for one request (no inference): one
+        controller step + the (topology, assignment)-keyed plan LRU."""
+        decision = self.controller.step(state)
+        entry, hit = self._plan_for(decision)
+        return decision, entry, hit
 
     def decide(self, state: GraphState
                ) -> tuple[Decision, PartitionPlan, Callable, bool]:
-        """The full control stage for one request (no inference)."""
-        decision = self.controller.step(state)
-        plan, forward, hit = self._plan_for(decision)
-        return decision, plan, forward, hit
+        """Back-compat surface of :meth:`decide_entry`."""
+        decision, entry, hit = self.decide_entry(state)
+        return decision, entry.plan, entry.forward, hit
+
+    def batched_forward(self, entry: PlanEntry) -> Callable:
+        """The prepared *batched* forward of a cached plan, built lazily on
+        the first continuous batch that forms on it (the per-plan numpy
+        prep runs once; jit then compiles once per batch-size bucket). The
+        streaming front-end's dispatch hook (``repro.serve.frontend``)."""
+        if entry.batched is None:
+            entry.batched = make_batched_forward_fn(self.mesh, self.axis,
+                                                    entry.plan,
+                                                    self.aggregate)
+        return entry.batched
 
     # -- serving -------------------------------------------------------------
     def serve(self, requests: Iterable[ServeRequest]
@@ -119,12 +149,28 @@ class ServingEngine:
         For each request the engine runs the control stage and dispatches
         the forward, then yields the *previous* request's result — so step
         t's decision overlaps step t−1's in-flight device computation. The
-        final result is flushed after the stream ends; order is preserved."""
+        final result is flushed after the stream ends; order is preserved.
+
+        A failing request never loses the one already in flight: if the
+        decide/dispatch of request t raises (bad state, failing policy,
+        poisoned iterator), request t−1's pending result is flushed to the
+        consumer first and the exception re-raised on the next pull."""
         pending = None
-        for t, req in enumerate(requests):
-            decision, plan, forward, hit = self.decide(req.state)
-            x_blocks = plan.scatter(np.asarray(req.x, np.float32))
-            out = forward(x_blocks, self.params)    # async dispatch
+        it = enumerate(requests)
+        while True:
+            try:
+                try:
+                    t, req = next(it)
+                except StopIteration:
+                    break
+                decision, plan, forward, hit = self.decide(req.state)
+                x_blocks = plan.scatter(np.asarray(req.x, np.float32))
+                out = forward(x_blocks, self.params)    # async dispatch
+            except BaseException:
+                if pending is not None:     # flush t−1 before propagating
+                    res, pending = self._finish(*pending), None
+                    yield res
+                raise
             if pending is not None:
                 yield self._finish(*pending)
             pending = (t, req, decision, plan, out, hit)

@@ -1,0 +1,504 @@
+"""Streaming request front-end: queue, admission control, continuous batching.
+
+The pipelined :class:`~repro.serve.engine.ServingEngine` serves one
+pre-materialized request stream at depth 1 — nothing models concurrent
+users pushing requests faster than the engine drains them. This module is
+the production-shaped front of the serving tier (the Fograph
+fog-serving architecture, arXiv:2307.01684, is the reference shape):
+
+* :class:`RequestQueue` — a **bounded** queue of :class:`StreamRequest`
+  (tenant id, arrival tick, deadline). Backpressure is explicit: when the
+  queue is full, ``submit`` rejects with reason ``"queue_full"`` and the
+  rejection is counted and recorded — requests are *never* silently
+  dropped, and ``admitted + rejected + deferred == submitted`` holds at
+  every instant (the conservation invariant CI gates on).
+* **Continuous batching** — each scheduling cycle groups queued requests
+  that share the head-of-line request's *topology fingerprint* (and
+  therefore its ``(topology_key, assignment_digest)`` plan-cache entry):
+  one control decision, one ``plan.scatter_batch`` to [P, B, L, F], one
+  dispatch of the cached plan's batched forward
+  (:func:`repro.gnn.distributed.make_batched_forward_fn`). B concurrent
+  requests on an unchanged topology cost one XLA dispatch instead of B.
+  Batch sizes are padded to power-of-two buckets so compiles stay bounded.
+  The GCN output depends only on the topology (adjacency + mask) and the
+  features — never on the offload placement — so members of a batch are
+  exactly the requests whose output the head's plan computes correctly.
+* **Lyapunov admission control** — :class:`LyapunovAdmission` keeps one
+  virtual queue per *tenant*, reusing the drift-plus-penalty update
+  :func:`repro.core.offload.lyapunov.virtual_queue_update` (the same
+  recursion the per-server offload scheduler scans): admitting a tenant's
+  request is an arrival on its queue, every serviced batch drains all
+  queues by the fair per-tenant share, and the admit/defer/reject decision
+  minimizes ``Q_tenant + V · (projected latency / deadline)`` against the
+  backlog bound θ. A flooding tenant builds backlog and gets rejected or
+  deferred while light tenants keep admitting, so the *admitted* p99
+  stays bounded under overload. :class:`StaticPriorityAdmission` is the
+  ablation baseline (fixed tenant ranks, no queue state, no deadlines);
+  :class:`AdmitAll` is the no-control arm.
+* **SLO telemetry** — every request is stamped on the injectable tick
+  clock (``repro.serve.metrics``) at arrival/admit/dispatch/done;
+  ``stats()`` aggregates p50/p95/p99 per phase and sustained requests/sec
+  in the ``BENCH_serving.json`` streaming-record shape.
+
+``StreamingFrontend.run(workload)`` drives an **open-loop** workload (a
+sorted ``(arrival_offset, request)`` iterable — see
+:func:`poisson_workload`): arrivals are injected on schedule regardless of
+service progress, so overload manifests as queue growth → backpressure,
+exactly the regime the admission controller is for.
+``repro.launch.serve_stream`` is the CLI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Iterator, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.api import topology_key
+from repro.core.dynamic_graph import GraphState
+from repro.core.offload.lyapunov import virtual_queue_update
+from repro.serve.engine import ServingEngine
+from repro.serve.metrics import (ManualClock, MonotonicClock, RequestTiming,
+                                 summarize)
+
+# rejection reasons (the only terminal states besides "served")
+REJECT_QUEUE_FULL = "queue_full"     # bounded-queue backpressure at submit
+REJECT_ADMISSION = "admission"       # admission controller said no
+REJECT_DEADLINE = "deadline"         # SLO budget already (or provably) blown
+
+ADMIT, DEFER, REJECT = "admit", "defer", "reject"
+
+
+@dataclass(frozen=True)
+class StreamRequest:
+    """One streamed inference request.
+
+    ``deadline`` is a *relative* SLO budget in clock ticks (seconds on the
+    default monotonic clock) from arrival; ``None`` = best effort.
+    ``rid`` is stamped by the front-end at submit when not provided."""
+    state: GraphState
+    x: np.ndarray                    # [N, F_in] vertex features
+    tenant: int = 0
+    deadline: float | None = None
+    rid: int | None = None
+
+
+@dataclass
+class _Entry:
+    """A queued request + its bookkeeping (timing stamps, lazy topo key)."""
+    req: StreamRequest
+    rid: int
+    timing: RequestTiming
+    deadline_tick: float | None      # absolute tick, None = best effort
+    topo: str | None = None
+    defers: int = 0
+
+    def topo_key(self) -> str:
+        if self.topo is None:
+            self.topo = topology_key(self.req.state)
+        return self.topo
+
+
+@dataclass(frozen=True)
+class Rejection:
+    """One rejected request — every non-served request gets exactly one."""
+    rid: int
+    tenant: int
+    reason: str
+    tick: float
+    defers: int = 0
+
+
+@dataclass(frozen=True)
+class StreamResult:
+    """One served request. ``decision`` is the control decision of the
+    batch head — every member of a continuous batch shares the head's
+    topology, so the head's plan serves all members exactly."""
+    rid: int
+    request: StreamRequest
+    output: np.ndarray               # [N, F_out] gathered global output
+    timing: RequestTiming
+    batch_size: int
+    plan_cache_hit: bool
+    decision: object = None
+
+
+class RequestQueue:
+    """Bounded FIFO of queued entries with explicit backpressure: ``offer``
+    returns False (and the front-end records a ``queue_full`` rejection)
+    instead of ever dropping silently."""
+
+    def __init__(self, depth: int):
+        self.depth = int(depth)
+        self._q: list[_Entry] = []
+
+    def offer(self, entry: _Entry) -> bool:
+        if len(self._q) >= self.depth:
+            return False
+        self._q.append(entry)
+        return True
+
+    def replace(self, entries: list[_Entry]) -> None:
+        """Install the survivors of a scheduling pass (FIFO order kept)."""
+        self._q = entries
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __iter__(self) -> Iterator[_Entry]:
+        return iter(self._q)
+
+
+# ---------------------------------------------------------------------------
+# admission controllers
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class AdmissionController(Protocol):
+    """Admit/defer/reject decision per candidate request, once per cycle.
+
+    ``decide`` sees the candidate entry, the current tick, the queue
+    backlog and the front-end's per-request service-time estimate;
+    ``on_cycle(served, now)`` is called once per scheduling cycle with the
+    number of requests just serviced (0 for an idle/all-deferred cycle) so
+    queue-state controllers can drain."""
+
+    def decide(self, entry: _Entry, now: float, backlog: int,
+               est_service: float) -> str: ...
+
+    def on_cycle(self, served: int, now: float) -> None: ...
+
+
+class AdmitAll:
+    """No admission control: everything the bounded queue accepted runs."""
+    name = "admit_all"
+
+    def decide(self, entry, now, backlog, est_service) -> str:
+        return ADMIT
+
+    def on_cycle(self, served, now) -> None:
+        pass
+
+
+class StaticPriorityAdmission:
+    """Static-priority baseline (the ablation arm): tenants carry fixed
+    ranks (default: tenant id — lower is more important). Below the
+    ``high_water`` backlog everyone admits; above it only tenants ranked
+    ``<= keep_rank`` do, everyone else is rejected outright. No queue
+    state, no deadline awareness — under overload the admitted latency of
+    the privileged tenants is protected but nothing bounds anyone's p99."""
+    name = "static_priority"
+
+    def __init__(self, high_water: int = 32, keep_rank: int = 0,
+                 priority: dict[int, int] | None = None):
+        self.high_water = int(high_water)
+        self.keep_rank = int(keep_rank)
+        self.priority = dict(priority or {})
+
+    def rank(self, tenant: int) -> int:
+        return self.priority.get(tenant, tenant)
+
+    def decide(self, entry, now, backlog, est_service) -> str:
+        if backlog <= self.high_water:
+            return ADMIT
+        return ADMIT if self.rank(entry.req.tenant) <= self.keep_rank \
+            else REJECT
+
+    def on_cycle(self, served, now) -> None:
+        pass
+
+
+class LyapunovAdmission:
+    """Per-tenant virtual-queue drift-plus-penalty admission control.
+
+    The same recursion as the per-server offload scheduler
+    (``repro.core.offload.lyapunov``), lifted to the serving tier:
+
+    * admitting a request from tenant τ is an **arrival** on Q_τ
+      (``Q_τ ← max(Q_τ + 1 − 0, 0)`` via :func:`virtual_queue_update`);
+    * every scheduling cycle **drains** all queues by the fair per-tenant
+      service share ``μ_τ = max(served, idle_drain) / T`` — a serviced
+      batch is capacity actually delivered, an idle cycle still offers
+      ``idle_drain`` of it (so an all-deferred queue always makes
+      progress: Q decays until someone admits again);
+    * the decision minimizes the drift-plus-penalty score
+      ``Q_τ + V · (wait + est_service) / deadline`` against the backlog
+      bound ``theta``: admit below it, defer above it while the deadline
+      still has slack for another cycle, reject otherwise. A request whose
+      budget is already un-meetable (``wait + est_service > deadline``)
+      is rejected immediately — admitting it would burn service on a
+      guaranteed SLO miss.
+
+    ``theta`` bounds every tenant's admitted-but-unserved backlog, so the
+    *admitted* latency tail stays bounded no matter how hard one tenant
+    floods; ``V`` trades fairness pressure against deadline pressure
+    (``V = 0`` → pure per-tenant fair queueing)."""
+    name = "lyapunov"
+
+    def __init__(self, num_tenants: int = 1, v: float = 1.0,
+                 theta: float = 8.0, idle_drain: float = 1.0):
+        self.num_tenants = max(1, int(num_tenants))
+        self.v = float(v)
+        self.theta = float(theta)
+        self.idle_drain = float(idle_drain)
+        self.q: dict[int, float] = {}
+        self.queue_max = 0.0          # boundedness certificate for tests
+
+    def decide(self, entry, now, backlog, est_service) -> str:
+        tenant = entry.req.tenant
+        wait = now - entry.timing.arrival
+        deadline = entry.req.deadline
+        projected = wait + est_service
+        if deadline is not None and projected > deadline:
+            return REJECT             # provably un-meetable SLO
+        q_t = self.q.get(tenant, 0.0)
+        penalty = (projected / deadline) if deadline else 0.0
+        if q_t + self.v * penalty <= self.theta:
+            q_t = float(virtual_queue_update(q_t, 1.0, 0.0, xp=np))
+            self.q[tenant] = q_t
+            self.queue_max = max(self.queue_max, q_t)
+            return ADMIT
+        # over the backlog bound: hold the request while its budget still
+        # has slack for (at least) one more service cycle, else shed it
+        if deadline is None or projected + est_service <= deadline:
+            return DEFER
+        return REJECT
+
+    def on_cycle(self, served, now) -> None:
+        mu = max(float(served), self.idle_drain) / self.num_tenants
+        for tenant, q_t in self.q.items():
+            self.q[tenant] = float(virtual_queue_update(q_t, 0.0, mu,
+                                                        xp=np))
+
+
+# ---------------------------------------------------------------------------
+# the front-end
+# ---------------------------------------------------------------------------
+
+def _bucket(b: int, max_batch: int) -> int:
+    """Smallest power-of-two ≥ b (capped at max_batch) — the batch axis is
+    padded to these buckets so each plan compiles O(log max_batch) times."""
+    p = 1
+    while p < b:
+        p <<= 1
+    return min(p, max(max_batch, b))
+
+
+@dataclass
+class FrontendStats:
+    """Terminal-state counters. The conservation invariant —
+    ``admitted + rejected + deferred == submitted`` — holds at every
+    instant: ``deferred`` is the number of requests still queued (their
+    decision deferred to a later cycle); at the end of a drained run it
+    is 0 and every request is accounted admitted or rejected."""
+    submitted: int = 0
+    admitted: int = 0
+    served: int = 0
+    deferred: int = 0                 # currently queued (non-terminal)
+    defer_events: int = 0             # total individual defer decisions
+    rejected: dict[str, int] = field(default_factory=dict)
+    batches: int = 0
+    batched_requests: int = 0         # requests served in batches of ≥ 2
+
+    @property
+    def rejected_total(self) -> int:
+        return sum(self.rejected.values())
+
+    @property
+    def conservation_ok(self) -> bool:
+        return self.admitted + self.rejected_total + self.deferred \
+            == self.submitted
+
+    def as_dict(self) -> dict:
+        return {"submitted": self.submitted, "admitted": self.admitted,
+                "served": self.served, "deferred": self.deferred,
+                "defer_events": self.defer_events,
+                "rejected": dict(self.rejected),
+                "rejected_total": self.rejected_total,
+                "batches": self.batches,
+                "batched_requests": self.batched_requests,
+                "conservation_ok": self.conservation_ok}
+
+
+@dataclass
+class StreamingFrontend:
+    """Bounded queue + admission + continuous batching over a
+    :class:`~repro.serve.engine.ServingEngine`.
+
+    ``pump()`` runs one scheduling cycle (admission pass → batch former →
+    one batched dispatch) and returns the served results; ``run()`` drives
+    a whole open-loop workload to drain. The engine's plan cache is the
+    batching substrate: the batch key *is* the plan-cache key, and the
+    batched forward is cached on the plan entry
+    (:meth:`ServingEngine.batched_forward`)."""
+    engine: ServingEngine
+    queue_depth: int = 64
+    max_batch: int = 8
+    admission: AdmissionController = field(default_factory=AdmitAll)
+    clock: MonotonicClock | ManualClock = field(
+        default_factory=MonotonicClock)
+    service_ewma: float = 0.2        # EWMA weight of new service samples
+
+    def __post_init__(self):
+        self.queue = RequestQueue(self.queue_depth)
+        self.stats = FrontendStats()
+        self.rejections: list[Rejection] = []
+        self.timings: list[RequestTiming] = []
+        self._est_service = 0.0      # per-request service-time estimate
+        self._next_rid = 0
+
+    # -- intake --------------------------------------------------------------
+    def submit(self, req: StreamRequest) -> bool:
+        """Enqueue a request; False = backpressure (``queue_full`` reject,
+        counted and recorded — never a silent drop)."""
+        now = self.clock.now()
+        rid = req.rid if req.rid is not None else self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.stats.submitted += 1
+        deadline_tick = None if req.deadline is None \
+            else now + float(req.deadline)
+        entry = _Entry(req, rid, RequestTiming(arrival=now), deadline_tick)
+        if not self.queue.offer(entry):
+            self._reject(entry, REJECT_QUEUE_FULL, now)
+            self.stats.deferred = len(self.queue)
+            return False
+        self.stats.deferred = len(self.queue)
+        return True
+
+    def _reject(self, entry: _Entry, reason: str, tick: float) -> None:
+        self.stats.rejected[reason] = self.stats.rejected.get(reason, 0) + 1
+        self.rejections.append(Rejection(entry.rid, entry.req.tenant,
+                                         reason, tick, entry.defers))
+
+    # -- one scheduling cycle ------------------------------------------------
+    def pump(self) -> list[StreamResult]:
+        """Admission pass + batch former + one batched dispatch.
+
+        Walks the queue in FIFO order: expired requests are rejected
+        (``deadline``), the first admissible request becomes the batch
+        head, and every later queued request sharing the head's topology
+        fingerprint joins (up to ``max_batch``, each passing its own
+        admission check). Requests on other topologies simply stay queued
+        for a later cycle — only an explicit controller decision defers or
+        rejects. Returns the served results of this cycle (possibly [])."""
+        now = self.clock.now()
+        backlog = len(self.queue)
+        batch: list[_Entry] = []
+        survivors: list[_Entry] = []
+        head_topo: str | None = None
+        for entry in self.queue:
+            if entry.deadline_tick is not None and now > entry.deadline_tick:
+                self._reject(entry, REJECT_DEADLINE, now)
+                continue
+            if len(batch) >= self.max_batch or (
+                    head_topo is not None
+                    and entry.topo_key() != head_topo):
+                survivors.append(entry)
+                continue
+            verdict = self.admission.decide(entry, now, backlog,
+                                            self._est_service)
+            if verdict == ADMIT:
+                entry.timing.admit = now
+                batch.append(entry)
+                head_topo = entry.topo_key()
+            elif verdict == DEFER:
+                entry.defers += 1
+                self.stats.defer_events += 1
+                survivors.append(entry)
+            else:
+                self._reject(entry, REJECT_ADMISSION, now)
+        self.queue.replace(survivors)
+        self.stats.deferred = len(self.queue)
+        if not batch:
+            self.admission.on_cycle(0, now)
+            return []
+        results = self._serve_batch(batch)
+        self.admission.on_cycle(len(batch), self.clock.now())
+        return results
+
+    def _serve_batch(self, batch: list[_Entry]) -> list[StreamResult]:
+        """One control decision on the head, one (batched) dispatch."""
+        head = batch[0]
+        t_admit = head.timing.admit
+        decision, entry, hit = self.engine.decide_entry(head.req.state)
+        plan, bsz = entry.plan, len(batch)
+        if bsz == 1:
+            x_blocks = plan.scatter(np.asarray(head.req.x, np.float32))
+            out = entry.forward(x_blocks, self.engine.params)
+            t_dispatch = self.clock.now()
+            outputs = [plan.gather(np.asarray(out))]
+        else:
+            fwd = self.engine.batched_forward(entry)
+            x_blocks = plan.scatter_batch([e.req.x for e in batch],
+                                          pad_to=_bucket(bsz,
+                                                         self.max_batch))
+            out = fwd(x_blocks, self.engine.params)
+            t_dispatch = self.clock.now()
+            outputs = plan.gather_batch(np.asarray(out), count=bsz)
+        t_done = self.clock.now()
+        # service-time estimate feeding the admission controller
+        per_req = (t_done - t_admit) / bsz
+        self._est_service = per_req if self._est_service == 0.0 else \
+            (1 - self.service_ewma) * self._est_service \
+            + self.service_ewma * per_req
+        self.stats.admitted += bsz
+        self.stats.served += bsz
+        self.stats.batches += 1
+        if bsz >= 2:
+            self.stats.batched_requests += bsz
+        results = []
+        for e, output in zip(batch, outputs):
+            e.timing.dispatch = t_dispatch
+            e.timing.done = t_done
+            self.timings.append(e.timing)
+            results.append(StreamResult(e.rid, e.req, output, e.timing,
+                                        bsz, hit, decision))
+        return results
+
+    # -- open-loop workload driver -------------------------------------------
+    def run(self, workload: Iterable[tuple[float, StreamRequest]]
+            ) -> list[StreamResult]:
+        """Drive a sorted ``(arrival_offset, request)`` workload to drain.
+
+        Open loop: requests are injected once their offset (relative to the
+        start tick) has passed, regardless of how far serving has fallen
+        behind — a rate above the service capacity fills the queue and
+        surfaces as backpressure/admission rejections, never as slowed-down
+        arrivals. Returns every served result (submission order within a
+        batch; batches in service order)."""
+        t0 = self.clock.now()
+        it = iter(workload)
+        nxt = next(it, None)
+        results: list[StreamResult] = []
+        while nxt is not None or len(self.queue):
+            now = self.clock.now() - t0
+            while nxt is not None and nxt[0] <= now:
+                self.submit(nxt[1])
+                nxt = next(it, None)
+            if not len(self.queue):
+                if nxt is not None:   # idle until the next arrival is due
+                    self.clock.sleep(nxt[0] - (self.clock.now() - t0))
+                continue
+            results.extend(self.pump())
+        return results
+
+    # -- telemetry -----------------------------------------------------------
+    def slo_summary(self) -> dict:
+        """p50/p95/p99/mean/max per phase + sustained requests/sec."""
+        return summarize(self.timings)
+
+    def stats_dict(self) -> dict:
+        return {**self.stats.as_dict(), "slo": self.slo_summary(),
+                "est_service": self._est_service,
+                "plan_cache": self.engine.plan_cache_info()._asdict()}
+
+
+def poisson_workload(rng: np.random.Generator, rate: float, count: int,
+                     make_request) -> list[tuple[float, StreamRequest]]:
+    """Open-loop Poisson-process workload: ``count`` arrivals at ``rate``
+    requests/tick (exponential inter-arrival gaps), each request built by
+    ``make_request(i)``. The standard "millions of independent users"
+    arrival model — bursts and lulls included."""
+    gaps = rng.exponential(1.0 / float(rate), size=count)
+    offsets = np.cumsum(gaps)
+    return [(float(offsets[i]), make_request(i)) for i in range(count)]

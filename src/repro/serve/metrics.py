@@ -1,0 +1,119 @@
+"""SLO telemetry for the streaming serving front-end.
+
+Every request that flows through :class:`repro.serve.frontend.
+StreamingFrontend` is stamped on a **monotonic tick clock** at four points
+— arrival (submit), admit (admission decision), dispatch (batched forward
+launched) and done (output fetched) — giving the four per-request phase
+latencies the SLO accounting is built on:
+
+    queue_wait = admit − arrival      (time spent queued / deferred)
+    decide     = dispatch − admit     (control step + scatter + dispatch)
+    forward    = done − dispatch      (device compute + output fetch)
+    total      = done − arrival       (the end-to-end request latency)
+
+The tick clock is injectable: :class:`MonotonicClock` (the default) reads
+``time.perf_counter`` so ticks are wall-clock seconds; :class:`ManualClock`
+is a deterministic logical clock for tests and simulated workloads — the
+front-end only ever calls ``now()`` and ``sleep()``, so the two are
+interchangeable. All tick arithmetic is float seconds in either case.
+
+:func:`summarize` aggregates a batch of timings into the
+``BENCH_serving.json`` streaming-record shape: p50/p95/p99/mean/max per
+phase plus **sustained requests/sec** (served count over the
+first-arrival→last-done span — the open-loop throughput number, not the
+inverse mean latency).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+PERCENTILES = (50, 95, 99)
+
+
+class MonotonicClock:
+    """Wall tick clock: ``now()`` is ``time.perf_counter`` seconds."""
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def sleep(self, dt: float) -> None:
+        if dt > 0:
+            time.sleep(dt)
+
+
+class ManualClock:
+    """Deterministic logical tick clock for tests/simulation: time moves
+    only via ``sleep``/``advance`` (and an optional fixed per-``now`` tick
+    so busy-loops cannot live-lock a simulated run)."""
+
+    def __init__(self, start: float = 0.0, tick_per_now: float = 0.0):
+        self._t = float(start)
+        self.tick_per_now = float(tick_per_now)
+
+    def now(self) -> float:
+        self._t += self.tick_per_now
+        return self._t
+
+    def sleep(self, dt: float) -> None:
+        self.advance(dt)
+
+    def advance(self, dt: float) -> None:
+        if dt > 0:
+            self._t += float(dt)
+
+
+@dataclass
+class RequestTiming:
+    """The four tick stamps of one served request (−1 = not reached)."""
+    arrival: float
+    admit: float = -1.0
+    dispatch: float = -1.0
+    done: float = -1.0
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admit - self.arrival
+
+    @property
+    def decide(self) -> float:
+        return self.dispatch - self.admit
+
+    @property
+    def forward(self) -> float:
+        return self.done - self.dispatch
+
+    @property
+    def total(self) -> float:
+        return self.done - self.arrival
+
+    def phases(self) -> dict[str, float]:
+        return {"queue_wait": self.queue_wait, "decide": self.decide,
+                "forward": self.forward, "total": self.total}
+
+
+def percentiles(values, pcts=PERCENTILES) -> dict[str, float]:
+    """{"p50": …, "p95": …, "p99": …, "mean": …, "max": …} of ``values``."""
+    arr = np.asarray(list(values), np.float64)
+    if arr.size == 0:
+        return {f"p{p}": float("nan") for p in pcts} | \
+            {"mean": float("nan"), "max": float("nan")}
+    out = {f"p{p}": float(np.percentile(arr, p)) for p in pcts}
+    out["mean"] = float(arr.mean())
+    out["max"] = float(arr.max())
+    return out
+
+
+def summarize(timings: list[RequestTiming]) -> dict:
+    """Aggregate served-request timings into the streaming SLO record:
+    per-phase percentile blocks + sustained requests/sec."""
+    if not timings:
+        return {"served": 0, "sustained_rps": 0.0}
+    span = max(t.done for t in timings) - min(t.arrival for t in timings)
+    out: dict = {"served": len(timings),
+                 "sustained_rps": len(timings) / max(span, 1e-9)}
+    for phase in ("queue_wait", "decide", "forward", "total"):
+        out[phase] = percentiles(getattr(t, phase) for t in timings)
+    return out

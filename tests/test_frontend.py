@@ -1,0 +1,259 @@
+"""Streaming front-end: bounded-queue backpressure, continuous batching
+parity against the oracle, Lyapunov/static admission under simulated
+overload, deadline shedding, the conservation invariant, and the SLO
+telemetry plumbing (repro.serve.frontend / repro.serve.metrics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import costs
+from repro.core.api import GraphEdgeController
+from repro.core.dynamic_graph import perturb_scenario, random_scenario
+from repro.core.offload.lyapunov import virtual_queue_update
+from repro.gnn.layers import gcn_apply, gcn_init
+from repro.serve import (AdmitAll, LyapunovAdmission, ManualClock,
+                         RequestTiming, ServingEngine,
+                         StaticPriorityAdmission, StreamRequest,
+                         StreamingFrontend, poisson_workload)
+from repro.serve.frontend import (REJECT_ADMISSION, REJECT_DEADLINE,
+                                  REJECT_QUEUE_FULL)
+from repro.serve.metrics import percentiles, summarize
+
+
+def make_engine(seed=0, capacity=24, users=18, m=3, e=40, **engine_kw):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, capacity, users, e)
+    net = costs.default_network(rng, capacity, m)
+    ctrl = GraphEdgeController(net=net, policy="greedy_jit")
+    params = gcn_init(jax.random.PRNGKey(seed), [8, 6, 4])
+    mesh = Mesh(np.array(jax.devices()[:1]), ("servers",))
+    engine = ServingEngine(controller=ctrl, params=params, mesh=mesh,
+                           **engine_kw)
+    return engine, state, rng
+
+
+def req(state, rng, tenant=0, deadline=None):
+    x = rng.normal(size=(state.capacity, 8)).astype(np.float32)
+    return StreamRequest(state, x, tenant=tenant, deadline=deadline)
+
+
+def oracle_err(engine, res):
+    st = res.request.state
+    oracle = np.asarray(gcn_apply(engine.params, jnp.asarray(res.request.x),
+                                  st.adj, st.mask))
+    served = np.nonzero(np.asarray(st.mask) > 0)[0]
+    return float(np.abs(res.output[served] - oracle[served]).max())
+
+
+# -- bounded queue / backpressure ---------------------------------------------
+
+def test_queue_full_backpressure_is_explicit():
+    """Overflowing the bounded queue rejects with reason queue_full —
+    counted, recorded, never silently dropped — and conservation holds at
+    every instant."""
+    engine, state, rng = make_engine()
+    fe = StreamingFrontend(engine=engine, queue_depth=2,
+                           clock=ManualClock(tick_per_now=0.01))
+    assert fe.submit(req(state, rng))
+    assert fe.stats.conservation_ok
+    assert fe.submit(req(state, rng))
+    assert not fe.submit(req(state, rng, tenant=7))    # full → backpressure
+    assert fe.stats.submitted == 3
+    assert fe.stats.rejected == {REJECT_QUEUE_FULL: 1}
+    assert fe.stats.deferred == 2                      # still queued
+    assert fe.stats.conservation_ok
+    rej = fe.rejections[0]
+    assert (rej.tenant, rej.reason) == (7, REJECT_QUEUE_FULL)
+    fe.pump()
+    assert fe.stats.served == 2 and fe.stats.deferred == 0
+    assert fe.stats.conservation_ok
+
+
+# -- continuous batching ------------------------------------------------------
+
+def test_burst_batches_and_matches_oracle():
+    """A same-topology burst forms real batches (one plan-cache entry, one
+    decide per batch) and every member matches the single-device oracle."""
+    engine, state, rng = make_engine()
+    fe = StreamingFrontend(engine=engine, queue_depth=16, max_batch=4)
+    results = fe.run([(0.0, req(state, rng)) for _ in range(6)])
+    assert len(results) == 6
+    assert fe.stats.batches == 2                       # 4 + 2
+    assert sorted(r.batch_size for r in results) == [2, 2, 4, 4, 4, 4]
+    assert fe.stats.batched_requests == 6
+    assert engine.plan_cache_info().misses == 1        # one shared plan
+    for r in results:
+        assert oracle_err(engine, r) < 1e-4
+    assert fe.stats.conservation_ok and fe.stats.deferred == 0
+    slo = fe.slo_summary()
+    assert slo["served"] == 6 and slo["sustained_rps"] > 0
+
+
+def test_batch_groups_only_matching_topology():
+    """The batch former only pulls queued requests sharing the head's
+    topology fingerprint; others stay queued (not deferred, not rejected)
+    for a later cycle."""
+    engine, state, rng = make_engine()
+    other = perturb_scenario(rng, state, 0.6)
+    fe = StreamingFrontend(engine=engine, queue_depth=16, max_batch=8,
+                           clock=ManualClock(tick_per_now=0.01))
+    for s in (state, state, other, state):
+        assert fe.submit(req(s, rng))
+    first = fe.pump()
+    assert len(first) == 3                             # the three on `state`
+    assert all(r.batch_size == 3 for r in first)
+    assert len(fe.queue) == 1 and fe.stats.defer_events == 0
+    second = fe.pump()
+    assert len(second) == 1 and second[0].request.state is other
+    assert fe.stats.conservation_ok and fe.stats.deferred == 0
+    for r in first + second:
+        assert oracle_err(engine, r) < 1e-4
+
+
+def test_batched_forward_matches_per_request_forward():
+    """The batched dispatch path (scatter_batch → vmapped forward →
+    gather_batch, with power-of-two padding) is numerically identical to
+    serving each member through the plan's single-request forward."""
+    engine, state, rng = make_engine()
+    decision, entry, _ = engine.decide_entry(state)
+    xs = [rng.normal(size=(state.capacity, 8)).astype(np.float32)
+          for _ in range(3)]
+    batched = engine.batched_forward(entry)
+    blocks = entry.plan.scatter_batch(xs, pad_to=4)    # bucket pads 3 → 4
+    outs = entry.plan.gather_batch(
+        np.asarray(batched(blocks, engine.params)), count=3)
+    for x, out in zip(xs, outs):
+        single = entry.plan.gather(np.asarray(
+            entry.forward(entry.plan.scatter(x), engine.params)))
+        np.testing.assert_allclose(out, single, atol=1e-6)
+
+
+# -- deadlines ---------------------------------------------------------------
+
+def test_expired_deadline_rejected_not_served():
+    """A queued request whose absolute deadline tick has passed is shed
+    with reason deadline before any service is spent on it."""
+    engine, state, rng = make_engine()
+    clock = ManualClock(tick_per_now=0.0)
+    fe = StreamingFrontend(engine=engine, queue_depth=8, clock=clock)
+    assert fe.submit(req(state, rng, deadline=0.5))
+    clock.advance(1.0)                                 # blow the budget
+    assert fe.pump() == []
+    assert fe.stats.rejected == {REJECT_DEADLINE: 1}
+    assert fe.stats.served == 0 and fe.stats.conservation_ok
+
+
+# -- admission control --------------------------------------------------------
+
+def test_static_priority_sheds_low_ranks_over_high_water():
+    """Above the high-water backlog only tenants ranked <= keep_rank keep
+    admitting; everyone else is rejected outright (the ablation arm)."""
+    engine, state, rng = make_engine()
+    fe = StreamingFrontend(
+        engine=engine, queue_depth=16,
+        admission=StaticPriorityAdmission(high_water=2, keep_rank=0),
+        clock=ManualClock(tick_per_now=0.01))
+    for tenant in (0, 1, 1, 1):
+        assert fe.submit(req(state, rng, tenant=tenant))
+    results = fe.pump()
+    assert [r.request.tenant for r in results] == [0]
+    assert fe.stats.rejected == {REJECT_ADMISSION: 3}
+    assert fe.stats.conservation_ok and fe.stats.deferred == 0
+
+
+def test_lyapunov_defers_over_theta_then_drains():
+    """Best-effort requests over the backlog bound are deferred (never
+    rejected), the idle drain keeps the virtual queues decaying, and the
+    whole queue eventually serves — no deadlock, nothing lost."""
+    engine, state, rng = make_engine()
+    adm = LyapunovAdmission(num_tenants=1, theta=0.5, idle_drain=1.0)
+    fe = StreamingFrontend(engine=engine, queue_depth=16, admission=adm,
+                           clock=ManualClock(tick_per_now=0.01))
+    for _ in range(4):
+        assert fe.submit(req(state, rng))              # one tenant floods
+    served = []
+    for _ in range(32):
+        served.extend(fe.pump())
+        if not len(fe.queue):
+            break
+    assert len(served) == 4                            # all eventually run
+    assert fe.stats.defer_events > 0
+    assert fe.stats.rejected == {}
+    assert fe.stats.conservation_ok and fe.stats.deferred == 0
+    assert adm.queue_max <= adm.theta + 1.0            # boundedness
+
+
+def test_lyapunov_bounds_admitted_tail_under_overload():
+    """Simulated overload (ManualClock: arrivals far above service): the
+    Lyapunov arm sheds load with fully-accounted rejects while the
+    *admitted* p99 stays within the SLO budget regime."""
+    engine, state, rng = make_engine()
+    deadline, tenants = 0.5, 3
+    adm = LyapunovAdmission(num_tenants=tenants)
+    fe = StreamingFrontend(engine=engine, queue_depth=8, max_batch=4,
+                           admission=adm,
+                           clock=ManualClock(tick_per_now=0.02))
+    wl = poisson_workload(
+        np.random.default_rng(3), rate=100.0, count=40,
+        make_request=lambda i: req(state, rng, tenant=i % tenants,
+                                   deadline=deadline))
+    results = fe.run(wl)
+    stats = fe.stats
+    assert stats.submitted == 40
+    assert stats.rejected_total > 0                    # overload sheds
+    assert stats.conservation_ok and stats.deferred == 0
+    assert stats.admitted == len(results)
+    slo = fe.slo_summary()
+    assert slo["total"]["p99"] <= 2 * deadline         # bounded tail
+    for r in results:
+        assert oracle_err(engine, r) < 1e-4
+
+
+def test_virtual_queue_update_shared_recursion():
+    """The front-end's admission controller runs on the same recursion as
+    the per-server offload scheduler: Q ← max(Q + a − μ, 0)."""
+    assert virtual_queue_update(0.0, 1.0, 0.0, xp=np) == 1.0
+    assert virtual_queue_update(1.0, 0.0, 0.4, xp=np) == pytest.approx(0.6)
+    assert virtual_queue_update(0.2, 0.0, 1.0, xp=np) == 0.0   # floor at 0
+    adm = LyapunovAdmission(num_tenants=2, idle_drain=1.0)
+    adm.q = {0: 1.0, 1: 0.25}
+    adm.on_cycle(served=0, now=0.0)                    # idle drain μ = 0.5
+    assert adm.q[0] == pytest.approx(0.5)
+    assert adm.q[1] == 0.0
+
+
+# -- telemetry ----------------------------------------------------------------
+
+def test_request_timing_phases_and_percentiles():
+    t = RequestTiming(arrival=1.0, admit=1.5, dispatch=1.75, done=2.0)
+    assert t.phases() == {"queue_wait": 0.5, "decide": 0.25,
+                          "forward": 0.25, "total": 1.0}
+    p = percentiles([1.0, 2.0, 3.0, 4.0])
+    assert p["p50"] == 2.5 and p["max"] == 4.0 and p["mean"] == 2.5
+    s = summarize([t, RequestTiming(arrival=2.0, admit=2.0, dispatch=2.5,
+                                    done=3.0)])
+    assert s["served"] == 2
+    assert s["sustained_rps"] == pytest.approx(1.0)    # span 1.0→3.0
+    assert s["total"]["max"] == 1.0
+    assert summarize([]) == {"served": 0, "sustained_rps": 0.0}
+
+
+def test_run_drains_open_loop_poisson_workload():
+    """End to end on the wall clock: a Poisson stream over two topologies
+    and three tenants drains, serves in batches, and conserves."""
+    engine, state, rng = make_engine()
+    other = perturb_scenario(rng, state, 0.4)
+    fe = StreamingFrontend(engine=engine, queue_depth=64, max_batch=8,
+                           admission=AdmitAll())
+    wl = poisson_workload(
+        rng, rate=400.0, count=24,
+        make_request=lambda i: req((state, other)[i % 2], rng,
+                                   tenant=i % 3))
+    results = fe.run(wl)
+    assert len(results) == 24
+    assert fe.stats.conservation_ok and fe.stats.deferred == 0
+    assert fe.stats.batches < 24                       # batching happened
+    assert engine.plan_cache_info().misses == 2        # one per topology
+    assert max(oracle_err(engine, r) for r in results) < 1e-4

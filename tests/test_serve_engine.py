@@ -131,6 +131,88 @@ def test_controller_partition_cache_lru_bound():
     assert ctrl.cache_info().misses == misses + 1
 
 
+def test_plan_cache_interleaved_tenant_topologies():
+    """Two tenants' topology streams interleaved: each distinct topology
+    costs exactly one miss, every revisit hits — batching's substrate."""
+    engine, state, rng = make_engine(plan_cache_size=8)
+    other = perturb_scenario(rng, state, 0.6)
+
+    def req(s):
+        return ServeRequest(s, rng.normal(size=(s.capacity, 8))
+                            .astype(np.float32))
+
+    results = engine.serve_all([req(state), req(other), req(state),
+                                req(other), req(state), req(other)])
+    assert [r.plan_cache_hit for r in results] == \
+        [False, False, True, True, True, True]
+    info = engine.plan_cache_info()
+    assert (info.hits, info.misses, info.currsize) == (4, 2, 2)
+    for res in results:
+        assert oracle_err(engine, res) < 1e-4
+
+
+def test_plan_cache_lru_eviction_order():
+    """A hit refreshes recency: with a 2-deep cache, A B A C evicts B (the
+    least recently *used*, not least recently inserted), so B misses again
+    while A keeps hitting until C+B push it out."""
+    engine, state, rng = make_engine(plan_cache_size=2)
+    s2 = perturb_scenario(rng, state, 0.6)
+    s3 = perturb_scenario(rng, s2, 0.6)
+
+    def req(s):
+        return ServeRequest(s, rng.normal(size=(s.capacity, 8))
+                            .astype(np.float32))
+
+    stream = [req(state), req(s2), req(state), req(s3), req(s2), req(state)]
+    results = engine.serve_all(stream)
+    #         A:miss  B:miss  A:hit  C:miss(evict B)  B:miss(evict A)  A:miss
+    assert [r.plan_cache_hit for r in results] == \
+        [False, False, True, False, False, False]
+    info = engine.plan_cache_info()
+    assert (info.hits, info.misses, info.currsize) == (1, 5, 2)
+
+
+# -- mid-stream failure ------------------------------------------------------
+
+class Boom(RuntimeError):
+    pass
+
+
+def test_serve_flushes_pending_on_poisoned_iterator():
+    """If the request *stream* raises after request t was dispatched,
+    t's in-flight result still reaches the consumer before the exception
+    propagates — the pipeline never silently loses a served request."""
+    engine, state, rng = make_engine()
+    good = ServeRequest(state, rng.normal(size=(state.capacity, 8))
+                        .astype(np.float32))
+
+    def poisoned():
+        yield good
+        raise Boom("stream died")
+
+    gen = engine.serve(poisoned())
+    res = next(gen)
+    assert res.request is good
+    assert oracle_err(engine, res) < 1e-4
+    with pytest.raises(Boom):
+        next(gen)
+
+
+def test_serve_flushes_pending_on_failing_decide():
+    """Same for a *request* whose control stage raises (bad state): the
+    previous request's pending result is flushed first."""
+    engine, state, rng = make_engine()
+    good = ServeRequest(state, rng.normal(size=(state.capacity, 8))
+                        .astype(np.float32))
+    bad = ServeRequest(None, good.x)          # controller.step(None) raises
+    gen = engine.serve([good, bad])
+    res = next(gen)
+    assert res.request is good
+    assert oracle_err(engine, res) < 1e-4
+    with pytest.raises(Exception):
+        next(gen)
+
+
 # -- multi-device end to end --------------------------------------------------
 
 @pytest.mark.slow
