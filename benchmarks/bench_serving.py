@@ -227,7 +227,20 @@ def _streaming_records(quick, mesh, devices) -> list:
     return records
 
 
-def run(quick: bool = True) -> None:
+def run(quick: bool = True, profile_dir: str | None = None) -> None:
+    import jax
+
+    if profile_dir is not None:
+        jax.profiler.start_trace(profile_dir)
+    try:
+        _run(quick)
+    finally:
+        if profile_dir is not None:
+            jax.profiler.stop_trace()
+            print(f"# profile trace written to {profile_dir}")
+
+
+def _run(quick: bool) -> None:
     import jax
     from jax.sharding import Mesh
 
@@ -302,5 +315,13 @@ def run(quick: bool = True) -> None:
 
 
 if __name__ == "__main__":
-    import sys
-    run(quick="--full" not in sys.argv)
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale axes (slow)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small axes (the default; --full overrides)")
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="write a jax.profiler trace of the run to DIR")
+    args = ap.parse_args()
+    run(quick=not args.full, profile_dir=args.profile)

@@ -35,9 +35,9 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.kernels.gnn_aggregate.ops import (SPARSE_DENSITY_THRESHOLD,
-                                             padded_neighbors_from_coo,
-                                             rank_within_sorted_groups)
+from repro.kernels.gnn_aggregate.ops import (padded_neighbors_from_coo,
+                                             rank_within_sorted_groups,
+                                             sort_neighbor_slots)
 
 
 @dataclass
@@ -317,13 +317,63 @@ def _halo_aggregate_sparse(x_blk, nbr_idx_blk, nbr_val_blk, send_idx,
     return acc * rs[:, None]
 
 
+# Per-layer aggregation step, one per `aggregate` mode. Uniform signature
+# (h, w, a_args, sidx, smask, rs, cs_e, axis) → aggregated [L, F_out]: each
+# mode places the layer matmul itself, because the fused mode reorders it —
+# aggregate the *pre-matmul* activations at F_in width, then project, the
+# formulation the fused Pallas kernel (kernels.gnn_aggregate.fused)
+# executes on TPU as one gather→MXU pass. Linearity makes all three equal.
+# Note the fused halo exchange consequently carries F_in-wide rows where
+# dense/sparse exchange F_out-wide ones.
+
+def _agg_step_dense(h, w, a_args, sidx, smask, rs, cs_e, axis: str):
+    return _halo_aggregate(h @ w, a_args[0], sidx, smask, rs, cs_e, axis)
+
+
+def _agg_step_sparse(h, w, a_args, sidx, smask, rs, cs_e, axis: str):
+    return _halo_aggregate_sparse(h @ w, a_args[0], a_args[1], sidx, smask,
+                                  rs, cs_e, axis)
+
+
+def _agg_step_fused(h, w, a_args, sidx, smask, rs, cs_e, axis: str):
+    agg = _halo_aggregate_sparse(h, a_args[0], a_args[1], sidx, smask, rs,
+                                 cs_e, axis)
+    return agg @ w
+
+
+_AGG_STEPS = {"dense": _agg_step_dense, "sparse": _agg_step_sparse,
+              "fused": _agg_step_fused}
+
+
+# Per-slot cost ratio of the gather path vs one dense MAC column: a padded
+# neighbor slot costs a random-access row load + FMA where the dense matmul
+# streams MXU-aligned tiles. Calibrated on the BENCH_kernels /
+# BENCH_partition shapes: dense wins at n=1000 (ext_cols=1004, K=34–35,
+# 1004 < 32·35) and loses from n=2000 up (ext_cols≥4154, K≈36–39) — the
+# crossover sits well between those, so the exact ratio has margin on
+# both sides.
+DENSE_AUTO_SLOT_RATIO = 32
+
+
 def resolve_aggregate(plan: PartitionPlan, aggregate: str = "auto") -> str:
-    """"auto" → "sparse" whenever the plan was built without dense blocks
-    or its density is below ``SPARSE_DENSITY_THRESHOLD``, else "dense"."""
+    """Select the per-device contraction: "dense", "sparse" or "fused".
+
+    "auto" compares per-row *work*, not density: the dense path does
+    ``ext_cols`` streaming MACs per row, the gather path ``max_degree + 1``
+    random-access slot gathers (self-loop included), each worth roughly
+    ``DENSE_AUTO_SLOT_RATIO`` dense MACs. Small extended blocks → "dense",
+    else "fused" (the gather+normalize+matmul kernel,
+    ``kernels.gnn_aggregate.fused``). Density alone mispredicts compact
+    layouts — the BENCH_partition n=1000 plan has density 0.02 (well under
+    ``SPARSE_DENSITY_THRESHOLD``) yet its 1004-wide extended block keeps
+    the dense matmul faster than any gather (agg_speedup 0.85× under the
+    old rule). ``bytes_per_aggregate`` (the collective volume) does not
+    discriminate: it is layout-independent at equal feature width — only
+    the per-device contraction differs between the paths."""
     if aggregate == "auto":
-        return ("sparse" if plan.adj_ext is None
-                or plan.density < SPARSE_DENSITY_THRESHOLD else "dense")
-    if aggregate not in ("dense", "sparse"):
+        dense_cols = DENSE_AUTO_SLOT_RATIO * (plan.max_degree + 1)
+        return "dense" if plan.ext_cols < dense_cols else "fused"
+    if aggregate not in ("dense", "sparse", "fused"):
         raise ValueError(f"unknown aggregate {aggregate!r}")
     return aggregate
 
@@ -362,6 +412,9 @@ def _plan_consts(plan: PartitionPlan, aggregate: str):
                                  axis=2)
         nbr_val = np.concatenate([plan.nbr_val, plan.mask[..., None]],
                                  axis=2)
+        if aggregate == "fused":
+            # the blocked kernel's sort-by-slot prefetch pass (host-side)
+            nbr_idx, nbr_val = sort_neighbor_slots(nbr_idx, nbr_val)
         agg_args = (jnp.asarray(nbr_idx), jnp.asarray(nbr_val))
     return jnp.asarray(dinv), jnp.asarray(cs_ext), agg_args
 
@@ -372,7 +425,7 @@ def _device_layers(x_blk, sidx, smask, rs, cs_e, mask_blk, a_args, ws_,
     batched forwards: x_blk [L, F_in] → masked [L, F_out]."""
     h = x_blk
     for i, w in enumerate(ws_):
-        h = agg_fn(h @ w, *a_args, sidx, smask, rs, cs_e, axis)
+        h = agg_fn(h, w, a_args, sidx, smask, rs, cs_e, axis)
         if i < len(ws_) - 1:
             h = jax.nn.relu(h)
     return h * mask_blk[:, None]
@@ -386,8 +439,7 @@ def _forward_blocks(mesh: Mesh, axis: str, aggregate: str, x_blocks,
     cache is keyed on (mesh, axis, aggregate) + array shapes, so repeated
     serving steps — and different plans with equal block/halo/K shapes —
     reuse one compiled executable."""
-    agg_fn = _halo_aggregate if aggregate == "dense" else \
-        _halo_aggregate_sparse
+    agg_fn = _AGG_STEPS[aggregate]
 
     def device_fn(x_blk, sidx, smask, rs, cs_e, mask_blk, a_args, ws_):
         # strip the sharded leading axis (block size 1 per device)
@@ -415,8 +467,7 @@ def _forward_blocks_batched(mesh: Mesh, axis: str, aggregate: str, x_blocks,
     body, so B concurrent requests on one cached plan cost a single XLA
     dispatch and one collective stream instead of B. The jit cache is
     keyed on shapes, so each batch-size bucket compiles once."""
-    agg_fn = _halo_aggregate if aggregate == "dense" else \
-        _halo_aggregate_sparse
+    agg_fn = _AGG_STEPS[aggregate]
 
     def device_fn(x_bb, sidx, smask, rs, cs_e, mask_blk, a_args, ws_):
         x_bb, sidx, smask = x_bb[0], sidx[0], smask[0]     # [B, L, F]
@@ -493,7 +544,9 @@ def distributed_gcn_forward(mesh: Mesh, axis: str, plan: PartitionPlan,
     Matches ``repro.gnn.layers.gcn_apply`` exactly (tested); collective
     traffic = plan.bytes_per_aggregate per layer. ``aggregate`` selects the
     per-device contraction: "dense" (blocked matmul over adj_ext), "sparse"
-    (gather/scan over the plan's padded neighbor lists), or "auto"
+    (gather/scan over the plan's padded neighbor lists), "fused" (the
+    gather+normalize+matmul formulation of
+    ``kernels.gnn_aggregate.fused``, slot-sorted layout), or "auto"
     (:func:`resolve_aggregate`). One-shot blocking wrapper over
     :func:`make_forward_fn` — pipelined callers build the forward once and
     dispatch asynchronously."""

@@ -15,9 +15,13 @@ Large sparse graphs (PubMed-scale, Fig. 6 sparse axis) take the **gather
 fast path** automatically: when the (concrete) adjacency has ≥
 ``SPARSE_MIN_VERTICES`` vertices and density below
 ``SPARSE_DENSITY_THRESHOLD``, ``gcn_apply``/``sgc_apply`` convert Â to
-padded neighbor lists once and every layer aggregates in O(E·F) via
-``repro.kernels.gnn_aggregate.ops.gather_aggregate`` instead of O(N²·F).
-Under jit tracing (or for small/dense graphs) the dense path is kept.
+slot-sorted padded neighbor lists once and every layer aggregates in
+O(E·F) instead of O(N²·F) — ``gcn_apply`` through the *fused*
+gather+normalize+matmul op
+(``repro.kernels.gnn_aggregate.ops.fused_gather_aggregate``, one kernel
+pass per layer), ``sgc_apply`` through the plain ``gather_aggregate``
+(its hops carry no per-hop weights to fuse). Under jit tracing (or for
+small/dense graphs) the dense path is kept.
 """
 from __future__ import annotations
 
@@ -28,9 +32,11 @@ import numpy as np
 from repro.nnlib.core import glorot_init
 from repro.kernels.gnn_aggregate.ops import (SPARSE_DENSITY_THRESHOLD,
                                              dense_to_padded_neighbors,
+                                             fused_gather_aggregate,
                                              gather_aggregate,
                                              normalized_aggregate,
-                                             padded_neighbors_from_coo)
+                                             padded_neighbors_from_coo,
+                                             sort_neighbor_slots)
 
 # below this the dense contraction is trivially cheap; skip the conversion
 SPARSE_MIN_VERTICES = 256
@@ -78,7 +84,7 @@ def maybe_padded_neighbors(adj_hat) -> tuple[jnp.ndarray, jnp.ndarray] | None:
         return None
     if np.count_nonzero(a) > SPARSE_DENSITY_THRESHOLD * n * n:
         return None
-    idx, val = dense_to_padded_neighbors(a)
+    idx, val = sort_neighbor_slots(*dense_to_padded_neighbors(a))
     return jnp.asarray(idx), jnp.asarray(val)
 
 
@@ -110,8 +116,13 @@ def gcn_apply(params, x, adj, mask, impl: str = "xla"):
     nbrs = maybe_padded_neighbors(a_hat)
     h = x
     for i, layer in enumerate(params):
-        h = propagate(a_hat, dinv, h @ layer["w"], impl=impl,
-                      neighbors=nbrs)
+        if nbrs is not None:
+            # fused gather+normalize+matmul: the whole layer hot path in
+            # one kernel pass (kernels.gnn_aggregate.fused)
+            h = fused_gather_aggregate(nbrs[0], nbrs[1], h, dinv, dinv,
+                                       layer["w"], impl=impl)
+        else:
+            h = propagate(a_hat, dinv, h @ layer["w"], impl=impl)
         if i < len(params) - 1:
             h = jax.nn.relu(h)
     return h * mask[:, None]

@@ -1,6 +1,7 @@
-"""Public ops: normalized_aggregate (dense) and gather_aggregate (sparse).
+"""Public ops: normalized_aggregate (dense), gather_aggregate (sparse) and
+fused_gather_aggregate (sparse aggregation + layer matmul in one kernel).
 
-``impl`` on both:
+``impl`` on all three:
   * "xla"      — plain jnp (runs everywhere; what the dry-run lowers)
   * "pallas"   — the TPU kernel (real hardware)
   * "interpret"— the Pallas kernel in interpret mode (CPU validation)
@@ -24,6 +25,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.gnn_aggregate.autotune import (DEFAULT_VMEM_BUDGET,
+                                                  get_config, vmem_bytes)
+from repro.kernels.gnn_aggregate.fused import gnn_fused_aggregate_pallas
 from repro.kernels.gnn_aggregate.gnn_aggregate import (
     gnn_aggregate_pallas, gnn_gather_aggregate_pallas)
 from repro.kernels.gnn_aggregate.ref import (gather_aggregate_ref,
@@ -107,17 +111,60 @@ def dense_to_padded_neighbors(adj: np.ndarray
         np.float32), adj.shape[0])
 
 
+def sort_neighbor_slots(nbr_idx, nbr_val) -> tuple[np.ndarray, np.ndarray]:
+    """Sort every row's neighbor slots by destination index, pads last.
+
+    The host-side "sort-by-slot prefetch" pass of the blocked fused layout
+    (kernels.gnn_aggregate.fused): within a row tile the gathers then walk
+    the resident XC slab quasi-monotonically instead of in insertion
+    order. Pure slot permutation per row — the aggregate is unchanged up
+    to float addition order. Works on [..., K] stacks (numpy, host-side)."""
+    idx = np.asarray(nbr_idx)
+    val = np.asarray(nbr_val)
+    key = np.where(val != 0, idx.astype(np.int64), np.iinfo(np.int64).max)
+    order = np.argsort(key, axis=-1, kind="stable")
+    return (np.take_along_axis(idx, order, -1),
+            np.take_along_axis(val, order, -1))
+
+
+def gather_block_columns(n_cols: int, k: int, block: int = 128,
+                         vmem_budget: int = DEFAULT_VMEM_BUDGET) -> int:
+    """The feature-block width ``bf`` for ``gnn_gather_aggregate_pallas``.
+
+    Enforces the kernel docstring's precondition — the resident
+    [n_cols, bf] XC slab (plus the [block, K] index/value blocks and the
+    output tile) must fit the VMEM budget — by halving ``bf`` from
+    ``block`` until it fits, and raising a clear error when even the
+    minimum width cannot."""
+    def resident(bf: int) -> int:
+        return 4 * (n_cols * bf + 2 * block * k + block + block * bf)
+
+    bf = block
+    while resident(bf) > vmem_budget and bf > 8:
+        bf //= 2
+    if resident(bf) > vmem_budget:
+        raise ValueError(
+            f"gather kernel: the [{n_cols}, {bf}] XC slab plus the "
+            f"[{block}, {k}] index/value blocks need {resident(bf)} B, "
+            f"over the {vmem_budget} B VMEM budget even at the minimum "
+            f"feature block — shard the columns or raise the budget")
+    return bf
+
+
 def gather_aggregate(nbr_idx: jnp.ndarray, nbr_val: jnp.ndarray,
                      x: jnp.ndarray, row_scale, col_scale,
-                     impl: str = "xla", block: int = 128) -> jnp.ndarray:
+                     impl: str = "xla", block: int = 128,
+                     vmem_budget: int | None = None) -> jnp.ndarray:
     """Sparse Y = (diag(rs)·A·diag(cs)) @ X over padded neighbor lists."""
     if impl == "xla":
         return gather_aggregate_ref(nbr_idx, nbr_val, x, row_scale,
                                     col_scale)
     if impl not in ("pallas", "interpret"):
         raise ValueError(f"unknown impl {impl!r}")
-    n, _ = nbr_idx.shape
+    n, k = nbr_idx.shape
     f = x.shape[1]
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else int(vmem_budget)
+    bf = gather_block_columns(x.shape[0], k, block, budget)
     cs = jnp.broadcast_to(jnp.asarray(col_scale, jnp.float32),
                           (x.shape[0],))
     xc = x.astype(jnp.float32) * cs[:, None]
@@ -127,8 +174,55 @@ def gather_aggregate(nbr_idx: jnp.ndarray, nbr_val: jnp.ndarray,
     idx_p = _pad_to(jnp.asarray(nbr_idx), block, (0,))
     val_p = _pad_to(jnp.asarray(nbr_val), block, (0,))
     rs_p = _pad_to(rs, block, (0,))
-    xc_p = _pad_to(xc, block, (1,))
+    xc_p = _pad_to(xc, bf, (1,))
     y = gnn_gather_aggregate_pallas(idx_p, val_p, xc_p, rs_p,
-                                    bm=block, bf=block,
+                                    bm=block, bf=bf,
                                     interpret=(impl == "interpret"))
     return y[:n, :f].astype(x.dtype)
+
+
+def fused_gather_aggregate(nbr_idx: jnp.ndarray, nbr_val: jnp.ndarray,
+                           x: jnp.ndarray, row_scale, col_scale,
+                           w: jnp.ndarray, impl: str = "xla",
+                           config=None,
+                           vmem_budget: int | None = None) -> jnp.ndarray:
+    """Fused layer hot path Y = (diag(rs)·A·diag(cs)·X) @ W, one kernel.
+
+    The gather+normalize aggregation and the layer weight matmul run in a
+    single blocked pass (kernels.gnn_aggregate.fused) — the gathered
+    neighborhood feeds the matmul tile-locally, never materializing the
+    aggregated [N, F_in] slab. ``config`` (an ``autotune.KernelConfig``)
+    overrides the tuned blocking; by default ``autotune.get_config``
+    resolves it from the persisted tuning table or the closed-form
+    heuristic. Callers should pre-sort slots with
+    :func:`sort_neighbor_slots` for the prefetch-friendly layout."""
+    if impl == "xla":
+        y = gather_aggregate_ref(nbr_idx, nbr_val, x.astype(jnp.float32),
+                                 row_scale, col_scale)
+        return (y @ jnp.asarray(w, jnp.float32)).astype(x.dtype)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(f"unknown impl {impl!r}")
+    n, k = nbr_idx.shape
+    n_cols, f_in = x.shape
+    f_out = w.shape[1]
+    budget = DEFAULT_VMEM_BUDGET if vmem_budget is None else int(vmem_budget)
+    if config is None:
+        config = get_config(n, n_cols, f_in, f_out, k, vmem_budget=budget)
+    if vmem_bytes(config, n_cols, k) > budget:
+        raise ValueError(
+            f"fused kernel config {tuple(config)} needs "
+            f"{vmem_bytes(config, n_cols, k)} B resident for n_cols="
+            f"{n_cols}, K={k}, over the {budget} B VMEM budget")
+    bm, bf, kc = config
+    cs = jnp.broadcast_to(jnp.asarray(col_scale, jnp.float32), (n_cols,))
+    xc = x.astype(jnp.float32) * cs[:, None]
+    rs = jnp.broadcast_to(jnp.asarray(row_scale, jnp.float32), (n,))
+    idx_p = _pad_to(_pad_to(jnp.asarray(nbr_idx), bm, (0,)), kc, (1,))
+    val_p = _pad_to(_pad_to(jnp.asarray(nbr_val), bm, (0,)), kc, (1,))
+    rs_p = _pad_to(rs, bm, (0,))
+    xc_p = _pad_to(xc, bf, (1,))
+    w_p = _pad_to(jnp.asarray(w, jnp.float32), bf, (0, 1))
+    y = gnn_fused_aggregate_pallas(idx_p, val_p, xc_p, rs_p, w_p,
+                                   bm=bm, bf=bf, kc=kc,
+                                   interpret=(impl == "interpret"))
+    return y[:n, :f_out].astype(x.dtype)
