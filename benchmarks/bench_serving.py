@@ -36,6 +36,17 @@ The file also carries the **streaming front-end records** (``"mode":
   ``p99 ≤ 2 × deadline``) with every shed request accounted
   (conservation), while the admit-all contrast arm shows the unbounded
   tail admission control removes.
+* ``decide_batch`` — the batched control plane (ISSUE 8): B distinct
+  perturbed topologies decided per-request (``decide_entry`` loop) vs as
+  one vmapped ``decide_entries`` call on the same warm engine. CI gates
+  **speedup ≥2×** and assignment-exact parity between the two roads.
+* ``cross_topology`` — continuous batching *across* topologies: an
+  all-at-once queue of requests spread over several perturbed layouts
+  (same shape bucket), served with ``cross_topology=True`` so one padded
+  multi-plan dispatch covers plan-heterogeneous batches. Records the
+  sustained req/s, the speedup over the PR 6 ``burst_batchable`` record
+  (``pr6_burst_rps_ref``), and the **exact** (bitwise, ``== 0``) parity
+  vs the sequential no-frontend engine oracle, which CI gates.
 """
 from __future__ import annotations
 
@@ -98,7 +109,7 @@ def _streaming_records(quick, mesh, devices) -> list:
 
     from repro.core import costs
     from repro.core.api import GraphEdgeController
-    from repro.core.dynamic_graph import random_scenario
+    from repro.core.dynamic_graph import perturb_scenario, random_scenario
     from repro.gnn.layers import gcn_init
     from repro.serve import (AdmitAll, LyapunovAdmission, ServeRequest,
                              ServingEngine, StreamRequest, StreamingFrontend,
@@ -224,6 +235,114 @@ def _streaming_records(quick, mesh, devices) -> list:
         LyapunovAdmission(num_tenants=tenants), "overload_lyapunov",
         deadline))
     records.append(overload_arm(AdmitAll(), "overload_admit_all", None))
+
+    # -- decide_batch: per-request decide loop vs one vmapped decide ---------
+    # B distinct perturbed topologies, caches sized to hold them all (the
+    # comparison is decide dispatch, not partition-recompute thrash).
+    n_topo_decide = 32 if quick else 64
+    topo_rng = np.random.default_rng(3)
+    decide_states = [state]
+    for _ in range(n_topo_decide - 1):
+        decide_states.append(perturb_scenario(topo_rng, decide_states[-1],
+                                              0.1))
+    dec_eng = ServingEngine(
+        controller=GraphEdgeController(net=net, policy="greedy_jit",
+                                       cache_size=2 * n_topo_decide),
+        params=params, mesh=mesh, num_devices=devices,
+        plan_cache_size=2 * n_topo_decide)
+    dec_eng.decide_entries(decide_states)            # warm the batched road
+    seq_entries = [dec_eng.decide_entry(s) for s in decide_states]
+    reps = 5
+    t0 = _time.perf_counter()
+    for _ in range(reps):
+        for s in decide_states:
+            dec_eng.decide_entry(s)
+    t_seq_dec = (_time.perf_counter() - t0) / reps
+    t0 = _time.perf_counter()
+    for _ in range(reps):
+        bat_entries = dec_eng.decide_entries(decide_states)
+    t_bat_dec = (_time.perf_counter() - t0) / reps
+    assign_exact = all(
+        np.array_equal(eb[0].servers, es[0].servers)
+        for eb, es in zip(bat_entries, seq_entries))
+    rec = {
+        "mode": "streaming", "workload": "decide_batch",
+        "users": users, "capacity": capacity, "devices": devices,
+        "batch": n_topo_decide,
+        "seq_decides_per_sec": n_topo_decide / t_seq_dec,
+        "batch_decides_per_sec": n_topo_decide / t_bat_dec,
+        "decide_batch_speedup": t_seq_dec / t_bat_dec,
+        "assign_exact": bool(assign_exact),
+    }
+    records.append(rec)
+    emit(f"streaming_decide_batch_b{n_topo_decide}",
+         t_bat_dec / n_topo_decide * 1e6,
+         f"batch_decides_per_sec={rec['batch_decides_per_sec']:.1f};"
+         f"speedup={rec['decide_batch_speedup']:.2f}x;"
+         f"assign_exact={assign_exact}")
+
+    # -- cross_topology: one dispatch serves plan-heterogeneous batches ------
+    # All requests queued up front (closed-loop drain — pure service rate),
+    # spread over several perturbed layouts sharing one shape bucket, with
+    # cross_topology batching and the vmapped decide_entries control plane.
+    n_cross = 256 if quick else 512
+    n_topo_cross = 4
+    mb_cross = 128
+    cross_states = [state]
+    for _ in range(n_topo_cross - 1):
+        cross_states.append(perturb_scenario(topo_rng, cross_states[-1],
+                                             0.1))
+    cross_xs = [rng.normal(size=(capacity, FEATURES)).astype(np.float32)
+                for _ in range(n_cross)]
+    cross_eng = make_engine()
+    cross_outs = [r.output for r in cross_eng.serve_all(
+        [ServeRequest(cross_states[i % n_topo_cross], x)
+         for i, x in enumerate(cross_xs)])]   # sequential oracle (+ warmup)
+
+    def cross_load():
+        return [(0.0, StreamRequest(cross_states[i % n_topo_cross], x))
+                for i, x in enumerate(cross_xs)]
+
+    StreamingFrontend(engine=cross_eng, queue_depth=n_cross,
+                      max_batch=mb_cross, cross_topology=True
+                      ).run(cross_load())              # warm padded plans
+    fe_x = StreamingFrontend(engine=cross_eng, queue_depth=n_cross,
+                             max_batch=mb_cross, cross_topology=True)
+    t0 = _time.perf_counter()
+    cross_results = fe_x.run(cross_load())
+    t_cross = _time.perf_counter() - t0
+    cross_rows = [np.nonzero(np.asarray(s.mask) > 0)[0]
+                  for s in cross_states]
+    cross_err = max(
+        float(np.abs(r.output[cross_rows[r.rid % n_topo_cross]]
+                     - cross_outs[r.rid][cross_rows[r.rid % n_topo_cross]]
+                     ).max())
+        for r in cross_results)
+    pr6_burst_rps_ref = 2792.697862932865   # PR 6 burst_batchable record
+    cyc = fe_x.cycles.as_dict()
+    rec = {
+        "mode": "streaming", "workload": "cross_topology",
+        "users": users, "capacity": capacity, "devices": devices,
+        "requests": n_cross, "topologies": n_topo_cross,
+        "max_batch": mb_cross,
+        "sustained_rps": len(cross_results) / t_cross,
+        "pr6_burst_rps_ref": pr6_burst_rps_ref,
+        "speedup_vs_pr6_burst": (len(cross_results) / t_cross
+                                 / pr6_burst_rps_ref),
+        "cross_batches": fe_x.stats.cross_batches,
+        "cross_batched_requests": fe_x.stats.cross_batched_requests,
+        "batch_hist": cyc["batch_hist"],
+        "decide_p50_s": cyc["decide"]["p50"],
+        "parity_vs_engine_max_err": cross_err,
+        "conservation_ok": bool(fe_x.stats.conservation_ok),
+    }
+    records.append(rec)
+    emit(f"streaming_cross_topology_u{users}",
+         t_cross / n_cross * 1e6,
+         f"sustained_rps={rec['sustained_rps']:.1f};"
+         f"speedup_vs_pr6_burst={rec['speedup_vs_pr6_burst']:.2f}x;"
+         f"max_err={cross_err:.1e};"
+         f"conservation={'ok' if rec['conservation_ok'] else 'BAD'}")
     return records
 
 

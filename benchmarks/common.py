@@ -12,37 +12,60 @@ import time
 BENCH_SCHEMA_VERSION = 1
 
 
-def git_describe() -> str:
-    """``git describe --always --dirty`` of the tree the bench ran in
-    ("unknown" outside a checkout), so BENCH_*.json files are
-    self-describing across PRs."""
+def _git(root: pathlib.Path, *args: str) -> str:
     try:
-        return subprocess.run(
-            ["git", "describe", "--always", "--dirty"],
-            cwd=pathlib.Path(__file__).resolve().parent,
-            capture_output=True, text=True, timeout=10,
-        ).stdout.strip() or "unknown"
+        return subprocess.run(["git", *args], cwd=root, capture_output=True,
+                              text=True, timeout=10).stdout.strip()
     except (OSError, subprocess.SubprocessError):
+        return ""
+
+
+def git_describe() -> str:
+    """``git describe --always`` of the tree the bench ran in, suffixed
+    ``-dirty`` when any *tracked, non-BENCH* file differs from HEAD
+    ("unknown" outside a checkout). ``BENCH_*.json`` files are the
+    benches' own outputs — regenerating them must not dirty their own
+    stamp, or a clean-HEAD regeneration could never produce a clean
+    stamp."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    head = _git(root, "describe", "--always")
+    if not head:
         return "unknown"
+    dirt = _git(root, "status", "--porcelain", "--untracked-files=no",
+                "--", ".", ":(exclude)BENCH_*.json")
+    return head + ("-dirty" if dirt else "")
 
 
 def warn_stale_benches(root: pathlib.Path | None = None) -> list[str]:
     """Warn (loudly, on stdout with the ``#`` CSV-comment prefix) for every
     checked-in ``BENCH_*.json`` whose stamped ``git`` describe no longer
-    matches the current tree — i.e. numbers generated at an older commit.
-    The ``-dirty`` suffix is ignored: only the base hash must match.
-    Returns the stale file names so callers/tests can assert on them."""
-    here = git_describe().removesuffix("-dirty")
+    matches the current tree — i.e. numbers generated at an older commit —
+    **or** whose stamp carries a ``-dirty`` suffix, meaning the numbers came
+    from an uncommitted tree and no commit can reproduce them. (The current
+    tree being dirty is fine — only the *stamp* must be clean and match.)
+    "Current tree" means the last commit touching anything *but*
+    ``BENCH_*.json``: committing freshly regenerated BENCH files moves
+    HEAD, so the stamp (taken before that commit) is compared against the
+    code it actually measured, not against the commit that merely
+    archived the numbers. Returns the flagged file names so
+    callers/tests can assert on them."""
+    root = root or pathlib.Path(__file__).resolve().parent.parent
+    here = _git(root, "log", "-1", "--format=%h", "--", ".",
+                ":(exclude)BENCH_*.json") \
+        or git_describe().removesuffix("-dirty")
     if here == "unknown":
         return []
-    root = root or pathlib.Path(__file__).resolve().parent.parent
     stale = []
     for path in sorted(root.glob("BENCH_*.json")):
         try:
             stamped = json.loads(path.read_text()).get("git", "unknown")
         except (OSError, json.JSONDecodeError):
             stamped = "unreadable"
-        if stamped.removesuffix("-dirty") != here:
+        if stamped.endswith("-dirty"):
+            stale.append(path.name)
+            print(f"# WARNING: {path.name} stamped {stamped!r} — numbers "
+                  f"from an uncommitted tree, regenerate at a clean HEAD")
+        elif stamped != here:
             stale.append(path.name)
             print(f"# WARNING: {path.name} stamped {stamped!r} but the "
                   f"tree is {here!r} — stale numbers, regenerate")

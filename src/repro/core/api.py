@@ -62,7 +62,7 @@ from repro.core import costs
 from repro.core.dynamic_graph import GraphState, perturb_scenario
 from repro.core.hicut import cut_metrics, hicut_jax, hicut_ref
 from repro.core.offload.batched_env import (BatchedOffloadEnv, EnvScene,
-                                            _scene_core)
+                                            _scene_core, stack_states)
 from repro.core.offload.env import OffloadEnv
 
 
@@ -406,6 +406,28 @@ def _jit_offload_and_cost(net: costs.EdgeNetwork, state: GraphState,
     return assign, reward, costs.system_cost(net, state, w, gnn)
 
 
+@partial(jax.jit, static_argnames=("decide", "gnn", "m"))
+def _jit_offload_and_cost_batch(net: costs.EdgeNetwork, states: GraphState,
+                                subgraphs: jnp.ndarray, zeta_sp, sub_w,
+                                cost_scale, gnn: costs.GNNCostParams, decide,
+                                m: int):
+    """Batched twin of :func:`_jit_offload_and_cost`: ``states`` is a
+    stacked [B, ...] GraphState pytree (``batched_env.stack_states``) and
+    ``subgraphs`` [B, N] i32. One vmapped XLA call builds all B
+    :class:`EnvScene` pytrees, rolls the policy's decision scan per scene
+    and accounts the exact Eqs. (12)–(14) cost — the whole scheduling
+    cycle's control work in a single dispatch, no per-request host
+    round-trips."""
+    def one(state, subgraph):
+        scene = _scene_core(net, state, subgraph, zeta_sp, sub_w,
+                            cost_scale, gnn)
+        assign, reward = decide(scene)
+        w = costs.assignment_onehot(assign, m)
+        return assign, reward, costs.system_cost(net, state, w, gnn)
+
+    return jax.vmap(one)(states, subgraphs)
+
+
 def _jit_decide(decide, net: costs.EdgeNetwork, state: GraphState, subgraph,
                 zeta_sp, sub_w, cost_scale, gnn: costs.GNNCostParams,
                 m: int) -> tuple[Assignment, costs.SystemCost]:
@@ -706,6 +728,59 @@ class GraphEdgeController:
         w = assignment.onehot(int(self.net.server_pos.shape[0]))
         sc = costs.system_cost(self.net, state, w, self.gnn)
         return Decision(state, part, assignment, sc, topo_key=key)
+
+    def step_batch(self, states: list[GraphState]) -> list[Decision]:
+        """Batched control step: B same-capacity layouts → B Decisions.
+
+        The serving-tier hot path (ISSUE 8 / ROADMAP "batch the controller
+        step too"): partitions are looked up per layout through the
+        topology-keyed LRU exactly as in :meth:`step`, then the offload
+        decision + exact cost for *all* B layouts runs as **one** vmapped
+        jitted XLA call (:func:`_jit_offload_and_cost_batch`) instead of B
+        sequential dispatches — the per-request decide cost is amortized
+        across the whole scheduling cycle. Requires a :class:`JitPolicy`;
+        other policies (and B = 1) fall back to per-state :meth:`step`.
+        Results are positionally aligned with ``states``."""
+        if not states:
+            return []
+        cap = states[0].capacity
+        if len(states) == 1 or not isinstance(self.policy, JitPolicy) \
+                or any(s.capacity != cap for s in states):
+            return [self.step(s) for s in states]
+        looked_up = [self._partition_cached(s) for s in states]
+        parts = [p for p, _ in looked_up]
+        subs = jnp.asarray(np.stack([np.asarray(p.subgraph, np.int32)
+                                     for p in parts]))
+        assign_b, reward_b, sc_b = _jit_offload_and_cost_batch(
+            self.net, stack_states(list(states)), subs, self.zeta_sp,
+            1.0 if self.use_subgraph_reward else 0.0, self.cost_scale,
+            self.gnn, type(self.policy).decide,
+            int(self.net.server_pos.shape[0]))
+        # one host fetch for the whole batch, then pure numpy unpacking
+        assign_np = np.asarray(assign_b, np.int64)
+        reward_np = np.asarray(reward_b, np.float64)
+        sc_np = jax.tree_util.tree_map(np.asarray, sc_b)
+        decisions = []
+        for b, (state, (part, key)) in enumerate(zip(states, looked_up)):
+            sc = jax.tree_util.tree_map(lambda leaf: leaf[b], sc_np)
+            stats = {"reward": float(reward_np[b]),
+                     "system_cost": float(sc.c), "t_all": float(sc.t_all),
+                     "i_all": float(sc.i_all),
+                     "cross_bits": float(sc.cross_bits.sum())}
+            assignment = Assignment(assign_np[b], float(reward_np[b]), stats)
+            decisions.append(Decision(state, part, assignment, sc,
+                                      topo_key=key))
+        return decisions
+
+    def jit_step_batch_fn(self) -> Callable[[GraphState], JitStepResult]:
+        """Batched twin of :meth:`jit_step_fn`: a pure traceable closure
+        over a **stacked** [B, ...] GraphState pytree
+        (``batched_env.stack_states``) returning a stacked
+        :class:`JitStepResult` — partition (re-cut inside the trace, like
+        ``jit_step_fn``), offload scan and exact cost, vmapped so a whole
+        scheduling cycle is one XLA computation. Same :class:`JitPolicy` /
+        :class:`JitPartitioner` requirements as :meth:`jit_step_fn`."""
+        return jax.vmap(self.jit_step_fn())
 
     def jit_step_fn(self) -> Callable[[GraphState], JitStepResult]:
         """Pure ``state → JitStepResult`` closure over this controller's

@@ -145,8 +145,19 @@ def _make_scenes(net: EdgeNetwork, states: GraphState, subgraphs, zeta_sp,
 
 
 def stack_states(states: Sequence[GraphState]) -> GraphState:
-    """[B] GraphStates (same capacity) → batched GraphState pytree."""
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+    """[B] GraphStates (same capacity) → batched GraphState pytree.
+
+    Sits on the streaming control plane's hot path
+    (``GraphEdgeController.step_batch`` stacks every scheduling cycle's
+    layouts before the one vmapped decide), so leaves are stacked on the
+    host — one ``device_put`` per leaf instead of B eager ``jnp.stack``
+    dispatches. Tracer leaves (stacking inside a trace) keep the pure
+    ``jnp`` road."""
+    def _stack(*xs):
+        if any(isinstance(x, jax.core.Tracer) for x in xs):
+            return jnp.stack(xs)
+        return jnp.asarray(np.stack([np.asarray(x) for x in xs]))
+    return jax.tree_util.tree_map(_stack, *states)
 
 
 # ---------------------------------------------------------------------------

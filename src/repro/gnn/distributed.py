@@ -28,6 +28,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -282,6 +283,106 @@ def make_partition_plan_dense_reference(adj: np.ndarray, assign: np.ndarray,
                          adj_ext)
 
 
+# ---------------------------------------------------------------------------
+# cross-topology shape buckets (DESIGN.md §7 "Cross-topology batching")
+# ---------------------------------------------------------------------------
+
+# Plans pad their (block, halo, max_degree) slot shapes up to multiples of
+# this quantum before joining a cross-topology batch, so dynamically
+# perturbed topologies whose plans differ by a few vertices/edges land in
+# the SAME shape bucket (one compiled executable, one dispatch) instead of
+# one bucket each. Larger quanta share more but pad more.
+PLAN_BUCKET_QUANTUM = 8
+
+
+def _ceil_to(v: int, q: int) -> int:
+    return max(q, -(-int(v) // q) * q)
+
+
+def plan_bucket(plan: PartitionPlan,
+                quantum: int = PLAN_BUCKET_QUANTUM) -> tuple:
+    """Shape bucket of a plan: ``(P, n, block', halo', k')`` with the slot
+    dims rounded up to ``quantum``. Two plans in the same bucket can be
+    padded (:func:`pad_plan`) to identical array shapes and served by one
+    dispatch of :func:`_forward_blocks_multi` — the bucket tuple *is* the
+    cross-topology batch key (the jit cache then keys on these shapes)."""
+    return (plan.num_devices, plan.n, _ceil_to(plan.block, quantum),
+            _ceil_to(plan.halo, quantum), _ceil_to(plan.max_degree, quantum))
+
+
+def pad_plan(plan: PartitionPlan, block: int, halo: int,
+             k: int) -> PartitionPlan:
+    """Pad a plan to ``(block, halo, k)`` slot shapes, exactly preserving
+    its forward semantics.
+
+    Padding appends inert slots only: pad rows carry ``mask = 0`` and zero
+    neighbor values, pad halo slots carry ``send_mask = 0`` (they publish
+    zero rows), pad neighbor slots carry value 0. Extended-column ids are
+    remapped to the widened ``[block' | P × halo']`` layout — a cross-edge
+    at old position ``q·halo + s`` of the flattened halo buffer moves to
+    ``q·halo' + s``, so every gathered value is unchanged and the padded
+    forward is numerically identical to the original (the scan-based
+    aggregates are *bitwise* identical: pads only ever add exact zeros)."""
+    p = plan.num_devices
+    assert block >= plan.block and halo >= plan.halo \
+        and k >= plan.max_degree, ((block, halo, k),
+                                   (plan.block, plan.halo, plan.max_degree))
+    perm = -np.ones((p, block), np.int64)
+    perm[:, :plan.block] = plan.perm.reshape(p, plan.block)
+    send_idx = np.zeros((p, halo), np.int64)
+    send_idx[:, :plan.halo] = plan.send_idx
+    send_mask = np.zeros((p, halo), np.float32)
+    send_mask[:, :plan.halo] = plan.send_mask
+    mask = np.zeros((p, block), np.float32)
+    mask[:, :plan.block] = plan.mask
+    # neighbor slots: remap extended cols into the widened layout, then pad
+    old_idx, old_val = plan.nbr_idx, plan.nbr_val
+    flat_halo = old_idx - plan.block          # q·halo + s for cross edges
+    remapped = np.where(
+        old_idx >= plan.block,
+        block + (flat_halo // plan.halo) * halo + flat_halo % plan.halo,
+        old_idx)
+    remapped = np.where(old_val != 0, remapped, 0)   # pad slots → col 0
+    nbr_idx = np.zeros((p, block, k), np.int64)
+    nbr_val = np.zeros((p, block, k), np.float32)
+    nbr_idx[:, :plan.block, :plan.max_degree] = remapped
+    nbr_val[:, :plan.block, :plan.max_degree] = old_val
+    return PartitionPlan(p, block, halo, plan.n, perm.reshape(-1), send_idx,
+                         send_mask, nbr_idx, nbr_val, mask)
+
+
+def pad_plan_to_bucket(plan: PartitionPlan, bucket: tuple) -> PartitionPlan:
+    """Pad a plan to its (or a compatible) :func:`plan_bucket` shape."""
+    p, n, block, halo, k = bucket
+    assert (p, n) == (plan.num_devices, plan.n), (bucket, plan.num_devices,
+                                                  plan.n)
+    return pad_plan(plan, block, halo, k)
+
+
+def scatter_multi(plans: Sequence[PartitionPlan], xs,
+                  pad_to: int | None = None) -> np.ndarray:
+    """Per-member scatter into one [P, B', L, F] cross-topology batch:
+    member i's features are laid out by *its own* plan's perm (the plans
+    must share a shape bucket). ``pad_to`` zero-fills the batch axis."""
+    b = len(xs) if pad_to is None else int(pad_to)
+    assert b >= len(xs) and len(plans) >= len(xs), (b, len(xs), len(plans))
+    blocks = [plan.scatter(np.asarray(x, np.float32))
+              for plan, x in zip(plans, xs)]
+    out = np.zeros((blocks[0].shape[0], b) + blocks[0].shape[1:], np.float32)
+    for i, blk in enumerate(blocks):
+        out[:, i] = blk
+    return out
+
+
+def gather_multi(plans: Sequence[PartitionPlan], blocks: np.ndarray,
+                 count: int | None = None) -> list[np.ndarray]:
+    """Inverse of :func:`scatter_multi`: member i's output is gathered by
+    its own plan's perm (padded batch slots beyond ``count`` dropped)."""
+    blocks = np.asarray(blocks)
+    count = blocks.shape[1] if count is None else int(count)
+    return [plans[i].gather(blocks[:, i]) for i in range(count)]
+
+
 def _halo_exchange(x_blk, send_idx, send_mask, axis: str):
     """Publish boundary rows and all-gather every device's halo buffer:
     [L, F] → extended rows [L + P·B, F]."""
@@ -484,6 +585,82 @@ def _forward_blocks_batched(mesh: Mesh, axis: str, aggregate: str, x_blocks,
                    out_specs=P(axis), check_rep=False)
     return fn(x_blocks, send_idx, send_mask, dinv, cs_ext, mask, agg_args,
               ws)
+
+
+class PlanConsts(NamedTuple):
+    """Everything the forward needs from one plan, prepped as jnp arrays
+    (:func:`prepare_plan_consts`). Cross-topology batches stack B of these
+    — one per member plan, all padded to a shared :func:`plan_bucket` —
+    along a batch axis and vmap the device body over them."""
+    send_idx: jnp.ndarray     # [P, H]
+    send_mask: jnp.ndarray    # [P, H]
+    dinv: jnp.ndarray         # [P, L]
+    cs_ext: jnp.ndarray       # [P, L + P·H]
+    mask: jnp.ndarray         # [P, L]
+    agg_args: tuple           # aggregate-layout arrays, each [P, ...]
+
+
+def prepare_plan_consts(plan: PartitionPlan, aggregate: str) -> PlanConsts:
+    """One-time per-plan prep (:func:`_plan_consts` + send maps) in the
+    stackable :class:`PlanConsts` form. ``aggregate`` must be resolved."""
+    dinv, cs_ext, agg_args = _plan_consts(plan, aggregate)
+    return PlanConsts(jnp.asarray(plan.send_idx),
+                      jnp.asarray(plan.send_mask), dinv, cs_ext,
+                      jnp.asarray(plan.mask), agg_args)
+
+
+@partial(jax.jit, static_argnames=("mesh", "axis", "aggregate"))
+def _forward_blocks_multi(mesh: Mesh, axis: str, aggregate: str, x_blocks,
+                          consts: PlanConsts, ws):
+    """Cross-topology twin of :func:`_forward_blocks_batched`: ``x_blocks``
+    is [P, B, L, F] and every per-plan constant in ``consts`` carries the
+    same batch axis ([P, B, ...]) — batch member i is served against *its
+    own* plan's send maps, normalization scales and extended adjacency,
+    so one dispatch serves B requests resolved against B **different**
+    cached plans (padded to one shape bucket). The per-member math is the
+    single-plan :func:`_device_layers` body vmapped over (x, consts)
+    inside the shard_map, so the collective stream stays single. The jit
+    cache keys on shapes = the bucket, so each bucket compiles once per
+    batch-size bucket."""
+    agg_fn = _AGG_STEPS[aggregate]
+
+    def device_fn(x_bb, sidx, smask, rs, cs_e, mask_blk, a_args, ws_):
+        x_bb, sidx, smask = x_bb[0], sidx[0], smask[0]     # [B, ...]
+        rs, cs_e, mask_blk = rs[0], cs_e[0], mask_blk[0]
+        a_args = tuple(a[0] for a in a_args)
+
+        def one(x_blk, sidx_b, smask_b, rs_b, cs_b, mask_b, args_b):
+            return _device_layers(x_blk, sidx_b, smask_b, rs_b, cs_b,
+                                  mask_b, args_b, ws_, agg_fn, axis)
+        return jax.vmap(one)(x_bb, sidx, smask, rs, cs_e, mask_blk,
+                             a_args)[None]
+
+    specs_in = (P(axis),) * 7 + (P(),)
+    fn = shard_map(device_fn, mesh=mesh, in_specs=specs_in,
+                   out_specs=P(axis), check_rep=False)
+    return fn(x_blocks, consts.send_idx, consts.send_mask, consts.dinv,
+              consts.cs_ext, consts.mask, consts.agg_args, ws)
+
+
+def make_multi_forward_fn(mesh: Mesh, axis: str, aggregate: str,
+                          consts: Sequence[PlanConsts]):
+    """B per-plan :class:`PlanConsts` (same bucket shapes) → one reusable
+    non-blocking cross-topology forward.
+
+    Stacks the members' constants along the batch axis once and returns
+    ``forward(x_blocks, params)`` over [P, B, L, F] blocks
+    (:func:`scatter_multi`) dispatching :func:`_forward_blocks_multi` —
+    the cross-topology continuous-batching hot path of
+    :class:`repro.serve.frontend.StreamingFrontend`. ``aggregate`` must be
+    pre-resolved (resolve on any padded member: bucket mates agree)."""
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=1),
+                                     *consts)
+
+    def forward(x_blocks, params):
+        ws = tuple(jnp.asarray(layer["w"]) for layer in params)
+        return _forward_blocks_multi(mesh, axis, aggregate,
+                                     jnp.asarray(x_blocks), stacked, ws)
+    return forward
 
 
 def make_forward_fn(mesh: Mesh, axis: str, plan: PartitionPlan,

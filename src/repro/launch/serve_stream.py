@@ -61,6 +61,17 @@ def _parse_args() -> argparse.Namespace:
                     help="lyapunov drift-plus-penalty weight V")
     ap.add_argument("--theta", type=float, default=8.0,
                     help="lyapunov admission backlog bound θ")
+    ap.add_argument("--tenant-weights", default="",
+                    help="weighted per-tenant service shares for the "
+                         "lyapunov controller, e.g. '0:3,1:1' (tenants "
+                         "not listed default to weight 1)")
+    ap.add_argument("--cross-topology", action="store_true",
+                    help="batch requests across topologies: one dispatch "
+                         "serves different cached plans padded to a "
+                         "shared shape bucket")
+    ap.add_argument("--threaded", action="store_true",
+                    help="concurrent intake: a producer thread injects "
+                         "arrivals while the pump loop dispatches")
     ap.add_argument("--plan-cache-size", type=int, default=16)
     ap.add_argument("--partitioner", default="hicut_jax")
     ap.add_argument("--policy", default="greedy_jit")
@@ -107,8 +118,18 @@ def main() -> None:
                            plan_cache_size=args.plan_cache_size)
 
     if args.admission == "lyapunov":
+        weights = {}
+        for pair in filter(None, args.tenant_weights.split(",")):
+            tenant, _, w = pair.partition(":")
+            weights[int(tenant)] = float(w)
         admission = LyapunovAdmission(num_tenants=args.tenants, v=args.v,
-                                      theta=args.theta)
+                                      theta=args.theta, weights=weights)
+        if weights:
+            print(f"tenant weights: {weights} (starvation bound from "
+                  f"backlog θ+4: "
+                  + ", ".join(
+                      f"τ{t}≤{admission.starvation_bound(t, args.theta + 4)}"
+                      f" cycles" for t in range(args.tenants)))
     elif args.admission == "static":
         admission = StaticPriorityAdmission()
     else:
@@ -116,7 +137,8 @@ def main() -> None:
     frontend = StreamingFrontend(engine=engine,
                                  queue_depth=args.queue_depth,
                                  max_batch=args.max_batch,
-                                 admission=admission)
+                                 admission=admission,
+                                 cross_topology=args.cross_topology)
 
     states = [random_scenario(rng, capacity, args.users, 3 * args.users)]
     for _ in range(args.topologies - 1):
@@ -135,7 +157,8 @@ def main() -> None:
           f"admission={args.admission}, {devices} mesh devices")
     workload = poisson_workload(rng, args.arrival_rate, args.count,
                                 make_request)
-    results = frontend.run(workload)
+    results = frontend.run_threaded(workload) if args.threaded \
+        else frontend.run(workload)
 
     err = 0.0
     for res in results:
@@ -155,8 +178,14 @@ def main() -> None:
           f"defer_events={stats['defer_events']})  "
           f"conservation={'ok' if stats['conservation_ok'] else 'VIOLATED'}")
     print(f"batches={stats['batches']} "
-          f"batched_requests={stats['batched_requests']}  "
+          f"batched_requests={stats['batched_requests']} "
+          f"cross_batches={stats['cross_batches']}  "
           f"|serve - oracle|max={err:.2e}")
+    cyc = frontend.cycles.as_dict()
+    if cyc["cycles"]:
+        print(f"cycles={cyc['cycles']} batch_hist={cyc['batch_hist']} "
+              f"decide p50={cyc['decide']['p50'] * 1e3:.2f}ms "
+              f"p95={cyc['decide']['p95'] * 1e3:.2f}ms")
     if summary.get("served"):
         print(f"sustained {summary['sustained_rps']:.2f} req/s")
         for phase in ("queue_wait", "decide", "forward", "total"):

@@ -18,13 +18,13 @@ from repro.serve.frontend import (AdmitAll, LyapunovAdmission, RequestQueue,
                                   StaticPriorityAdmission, StreamRequest,
                                   StreamResult, StreamingFrontend,
                                   poisson_workload)
-from repro.serve.metrics import (ManualClock, MonotonicClock, RequestTiming,
-                                 summarize)
+from repro.serve.metrics import (CycleTelemetry, ManualClock, MonotonicClock,
+                                 RequestTiming, summarize)
 
 __all__ = [
-    "AdmitAll", "LyapunovAdmission", "ManualClock", "MonotonicClock",
-    "PlanEntry", "RequestQueue", "RequestTiming", "ServeRequest",
-    "ServeResult", "ServingEngine", "StaticPriorityAdmission",
-    "StreamRequest", "StreamResult", "StreamingFrontend",
-    "poisson_workload", "summarize",
+    "AdmitAll", "CycleTelemetry", "LyapunovAdmission", "ManualClock",
+    "MonotonicClock", "PlanEntry", "RequestQueue", "RequestTiming",
+    "ServeRequest", "ServeResult", "ServingEngine",
+    "StaticPriorityAdmission", "StreamRequest", "StreamResult",
+    "StreamingFrontend", "poisson_workload", "summarize",
 ]

@@ -28,8 +28,8 @@ request buffers. ``serve`` is a generator that preserves request order.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass
-from typing import Callable, Iterable, Iterator
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Iterator, Sequence
 
 import numpy as np
 from jax.sharding import Mesh
@@ -37,8 +37,11 @@ from jax.sharding import Mesh
 from repro.core.api import (CacheInfo, Decision, GraphEdgeController,
                             LruCache, topology_key)
 from repro.core.dynamic_graph import GraphState
-from repro.gnn.distributed import (PartitionPlan, make_batched_forward_fn,
-                                   make_forward_fn)
+from repro.gnn.distributed import (PartitionPlan, PlanConsts,
+                                   make_batched_forward_fn, make_forward_fn,
+                                   make_multi_forward_fn, pad_plan_to_bucket,
+                                   plan_bucket, prepare_plan_consts,
+                                   resolve_aggregate)
 
 
 @dataclass(frozen=True)
@@ -69,11 +72,17 @@ def _assignment_digest(servers: np.ndarray) -> str:
 class PlanEntry:
     """One plan-cache value: the plan, its prepared single-request forward,
     and — built lazily, only once a continuous batch actually forms on this
-    plan — the prepared batched forward (``make_batched_forward_fn``)."""
+    plan — the prepared batched forward (``make_batched_forward_fn``) plus,
+    for cross-topology batches, the plan padded to its shape bucket with
+    its stackable forward constants (``padded``: bucket → (plan, consts)).
+    All lazily-built members stay with the entry, so they age out of the
+    LRU together with the plan."""
     key: tuple[str, str]
     plan: PartitionPlan
     forward: Callable
     batched: Callable | None = None
+    bucket: tuple | None = None
+    padded: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -96,6 +105,7 @@ class ServingEngine:
         if self.num_devices is None:
             self.num_devices = int(np.prod(list(self.mesh.shape.values())))
         self._plan_cache = LruCache(self.plan_cache_size)
+        self._multi_cache = LruCache(self.plan_cache_size)
 
     # -- control + plan stage ------------------------------------------------
     def _plan_for(self, decision: Decision) -> tuple[PlanEntry, bool]:
@@ -124,6 +134,17 @@ class ServingEngine:
         entry, hit = self._plan_for(decision)
         return decision, entry, hit
 
+    def decide_entries(self, states: Sequence[GraphState]
+                       ) -> list[tuple[Decision, PlanEntry, bool]]:
+        """The control stage for a whole scheduling cycle: ALL states are
+        decided in one vmapped XLA call (``GraphEdgeController.step_batch``
+        — scene build + policy + exact cost stacked over the batch), then
+        each decision goes through the plan LRU. This is the batched-decide
+        hot path of the streaming front-end's pump loop; per-request decide
+        pays one dispatch per request, this pays one per cycle."""
+        decisions = self.controller.step_batch(states)
+        return [(d,) + self._plan_for(d) for d in decisions]
+
     def decide(self, state: GraphState
                ) -> tuple[Decision, PartitionPlan, Callable, bool]:
         """Back-compat surface of :meth:`decide_entry`."""
@@ -140,6 +161,58 @@ class ServingEngine:
                                                     entry.plan,
                                                     self.aggregate)
         return entry.batched
+
+    # -- cross-topology batching ---------------------------------------------
+    def entry_bucket(self, entry: PlanEntry) -> tuple:
+        """The entry's shape bucket (:func:`plan_bucket`) — the batch key
+        for cross-topology continuous batching (computed once, kept on the
+        entry)."""
+        if entry.bucket is None:
+            entry.bucket = plan_bucket(entry.plan)
+        return entry.bucket
+
+    def _padded_member(self, entry: PlanEntry, bucket: tuple
+                       ) -> tuple[PartitionPlan, PlanConsts]:
+        """The entry's plan padded to ``bucket`` plus its stackable forward
+        constants, built once per (entry, bucket). Padding appends inert
+        slots only, so the padded forward is bitwise-identical to the
+        original plan's (``pad_plan``); the aggregate is resolved on the
+        *padded* shapes so every bucket member picks the same kernel."""
+        got = entry.padded.get(bucket)
+        if got is None:
+            plan = pad_plan_to_bucket(entry.plan, bucket)
+            agg = resolve_aggregate(plan, self.aggregate)
+            got = (plan, prepare_plan_consts(plan, agg), agg)
+            entry.padded[bucket] = got
+        return got[0], got[1]
+
+    def cross_batched_forward(self, entries: Sequence[PlanEntry]
+                              ) -> tuple[list[PartitionPlan], Callable]:
+        """One dispatchable forward serving requests resolved against
+        *different* cached plans.
+
+        The entries must share a shape bucket (``entry_bucket``). Returns
+        the per-member padded plans — whose ``scatter``/``gather`` lay out
+        each member's features by its own perm (``scatter_multi``) — and
+        the stacked multi-plan forward over [P, B, L, F] blocks. The
+        stacked closure is LRU-cached on the ordered member keys: steady
+        streams cycling over a hot set of topologies rebuild nothing, and
+        the jit cache underneath keys on the bucket shapes, so even a cold
+        member set of a warm bucket skips compilation."""
+        bucket = self.entry_bucket(entries[0])
+        assert all(self.entry_bucket(e) == bucket for e in entries), \
+            [self.entry_bucket(e) for e in entries]
+        key = (bucket, tuple(e.key for e in entries))
+        hit = self._multi_cache.get(key)
+        if hit is not None:
+            return hit
+        members = [self._padded_member(e, bucket) for e in entries]
+        plans = [m[0] for m in members]
+        agg = entries[0].padded[bucket][2]
+        forward = make_multi_forward_fn(self.mesh, self.axis, agg,
+                                        [m[1] for m in members])
+        self._multi_cache.put(key, (plans, forward))
+        return plans, forward
 
     # -- serving -------------------------------------------------------------
     def serve(self, requests: Iterable[ServeRequest]

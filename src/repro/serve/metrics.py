@@ -106,6 +106,44 @@ def percentiles(values, pcts=PERCENTILES) -> dict[str, float]:
     return out
 
 
+class CycleTelemetry:
+    """Decide-stage telemetry, one sample per scheduling cycle: the batch
+    size the cycle's single (vmapped) control dispatch covered, and the
+    decide-phase latency (admit→dispatch ticks) of that cycle.
+
+    ``as_dict`` emits the per-cycle batch-size histogram plus decide
+    p50/p95 — the numbers that show the batched controller amortizing
+    (cycle batch sizes ≫ 1 while decide-per-request falls). Deterministic
+    under :class:`ManualClock`; the front-end records one sample per
+    non-empty ``pump`` cycle."""
+
+    def __init__(self):
+        self.batch_sizes: list[int] = []
+        self.decide_ticks: list[float] = []
+
+    def record(self, batch_size: int, decide: float) -> None:
+        self.batch_sizes.append(int(batch_size))
+        self.decide_ticks.append(float(decide))
+
+    def histogram(self) -> dict[int, int]:
+        out: dict[int, int] = {}
+        for b in self.batch_sizes:
+            out[b] = out.get(b, 0) + 1
+        return dict(sorted(out.items()))
+
+    def as_dict(self) -> dict:
+        dec = percentiles(self.decide_ticks)
+        per_req = [t / b for t, b in
+                   zip(self.decide_ticks, self.batch_sizes)]
+        return {"cycles": len(self.batch_sizes),
+                "batch_hist": {str(k): v
+                               for k, v in self.histogram().items()},
+                "batch_mean": (float(np.mean(self.batch_sizes))
+                               if self.batch_sizes else 0.0),
+                "decide": {"p50": dec["p50"], "p95": dec["p95"]},
+                "decide_per_request": percentiles(per_req)}
+
+
 def summarize(timings: list[RequestTiming]) -> dict:
     """Aggregate served-request timings into the streaming SLO record:
     per-phase percentile blocks + sustained requests/sec."""

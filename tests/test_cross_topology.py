@@ -1,0 +1,180 @@
+"""Cross-topology batching: shape buckets, plan padding (bitwise-exact),
+the multi-plan forward, the engine's bucket-keyed cross dispatch, and the
+batched-decide control path (ISSUE 8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import costs
+from repro.core.api import GraphEdgeController
+from repro.core.dynamic_graph import perturb_scenario, random_scenario
+from repro.gnn.distributed import (PLAN_BUCKET_QUANTUM, gather_multi,
+                                   make_forward_fn, make_multi_forward_fn,
+                                   make_partition_plan, pad_plan,
+                                   pad_plan_to_bucket, plan_bucket,
+                                   prepare_plan_consts, scatter_multi)
+from repro.gnn.layers import gcn_init
+from repro.serve.engine import ServeRequest, ServingEngine
+
+
+def rand_adj(rng, n, p=0.2):
+    a = rng.random((n, n)) < p
+    a = np.triu(a, 1)
+    return (a | a.T).astype(np.float64)
+
+
+def mesh1():
+    return Mesh(np.array(jax.devices()[:1]), ("servers",))
+
+
+def build_plans(rng, sizes, p=1):
+    plans = []
+    for n in sizes:
+        assign = rng.integers(0, p, n)
+        plans.append(make_partition_plan(rand_adj(rng, n), assign, p))
+    return plans
+
+
+# -- shape buckets -----------------------------------------------------------
+
+def test_plan_bucket_quantizes_slot_dims():
+    rng = np.random.default_rng(0)
+    plan = build_plans(rng, [19])[0]
+    p, n, block, halo, k = plan_bucket(plan)
+    assert (p, n) == (plan.num_devices, plan.n)
+    for padded, raw in ((block, plan.block), (halo, plan.halo),
+                        (k, plan.max_degree)):
+        assert padded >= max(raw, PLAN_BUCKET_QUANTUM)
+        assert padded % PLAN_BUCKET_QUANTUM == 0
+        assert padded - raw < PLAN_BUCKET_QUANTUM \
+            or raw < PLAN_BUCKET_QUANTUM
+
+
+def test_nearby_topologies_share_a_bucket():
+    """Perturbed same-capacity layouts — the streaming workload — land in
+    one bucket (that is the whole point of the quantum)."""
+    rng = np.random.default_rng(1)
+    state = random_scenario(rng, 24, 18, 40)
+    other = perturb_scenario(rng, state, 0.1)
+    plans = [make_partition_plan(np.asarray(s.adj, np.float64),
+                                 np.zeros(24, np.int64), 1)
+             for s in (state, other)]
+    assert plan_bucket(plans[0]) == plan_bucket(plans[1])
+
+
+# -- plan padding ------------------------------------------------------------
+
+def test_pad_plan_is_bitwise_exact():
+    """Padding appends inert slots only: the padded plan's forward output
+    is bit-for-bit the original's, for every aggregate kernel."""
+    rng = np.random.default_rng(2)
+    plan = build_plans(rng, [22])[0]
+    padded = pad_plan(plan, plan.block + 11, plan.halo + 5,
+                      plan.max_degree + 3)
+    x = rng.standard_normal((plan.n, 8)).astype(np.float32)
+    params = gcn_init(jax.random.PRNGKey(0), [8, 6, 4])
+    for agg in ("dense", "sparse", "fused"):
+        ref = make_forward_fn(mesh1(), "servers", plan, aggregate=agg)
+        fwd = make_forward_fn(mesh1(), "servers", padded, aggregate=agg)
+        y_ref = plan.gather(np.asarray(ref(plan.scatter(x), params)))
+        y_pad = padded.gather(np.asarray(fwd(padded.scatter(x), params)))
+        assert np.array_equal(y_ref, y_pad), agg
+
+
+def test_pad_plan_refuses_to_shrink():
+    rng = np.random.default_rng(3)
+    plan = build_plans(rng, [16])[0]
+    with pytest.raises(AssertionError):
+        pad_plan(plan, plan.block - 1, plan.halo, plan.max_degree)
+
+
+# -- multi-plan forward ------------------------------------------------------
+
+@pytest.mark.parametrize("agg", ["dense", "sparse", "fused"])
+def test_multi_forward_matches_per_plan_forward(agg):
+    """One cross-topology dispatch over B different plans is bitwise equal
+    to B per-plan single dispatches."""
+    rng = np.random.default_rng(4)
+    plans = build_plans(rng, [18, 25, 21])
+    bucket = tuple(np.max([plan_bucket(p) for p in plans], axis=0)[2:])
+    padded = [pad_plan(p, *bucket) for p in plans]
+    xs = [rng.standard_normal((p.n, 8)).astype(np.float32) for p in plans]
+    params = gcn_init(jax.random.PRNGKey(1), [8, 6, 4])
+    fwd = make_multi_forward_fn(
+        mesh1(), "servers", agg,
+        [prepare_plan_consts(p, agg) for p in padded])
+    outs = gather_multi(padded, np.asarray(
+        fwd(scatter_multi(padded, xs), params)))
+    for plan, x, out in zip(plans, xs, outs):
+        single = make_forward_fn(mesh1(), "servers", plan, aggregate=agg)
+        y = plan.gather(np.asarray(single(plan.scatter(x), params)))
+        assert np.array_equal(out, y)
+
+
+# -- engine surface ----------------------------------------------------------
+
+def make_engine(seed=0, capacity=24, users=18, m=3, e=40, **kw):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, capacity, users, e)
+    net = costs.default_network(rng, capacity, m)
+    ctrl = GraphEdgeController(net=net, policy="greedy_jit")
+    params = gcn_init(jax.random.PRNGKey(seed), [8, 6, 4])
+    engine = ServingEngine(controller=ctrl, params=params, mesh=mesh1(),
+                           **kw)
+    return engine, state, rng
+
+
+def test_decide_entries_matches_sequential_decide():
+    """The batched control stage (one vmapped XLA call for the cycle) is
+    assignment-exact against per-request decide_entry, and both roads meet
+    in the same plan-cache entries."""
+    engine, state, rng = make_engine()
+    states = [state] + [perturb_scenario(rng, state, 0.3)
+                        for _ in range(3)]
+    seq = [engine.decide_entry(s) for s in states]
+    engine2, _, _ = make_engine()
+    got = engine2.decide_entries(states)
+    assert len(got) == len(seq)
+    for (d_s, e_s, _), (d_b, e_b, _) in zip(seq, got):
+        np.testing.assert_array_equal(d_s.assignment.servers,
+                                      d_b.assignment.servers)
+        assert d_b.cost.c == pytest.approx(d_s.cost.c, rel=1e-5)
+        assert e_s.key == e_b.key
+    # the batch hits the same cache entries a second time around
+    hits0 = engine2.plan_cache_info().hits
+    engine2.decide_entries(states)
+    assert engine2.plan_cache_info().hits == hits0 + len(states)
+
+
+def test_cross_batched_forward_exact_vs_sequential_engine():
+    """The engine's bucket-keyed cross dispatch serves requests resolved
+    against different cached plans with EXACT parity (max err == 0) vs the
+    sequential per-request engine — the CI-gated invariant."""
+    engine, state, rng = make_engine(aggregate="fused")
+    states = [state] + [perturb_scenario(rng, state, 0.2)
+                        for _ in range(2)]
+    xs = [rng.normal(size=(s.capacity, 8)).astype(np.float32)
+          for s in states]
+    # sequential oracle on an identical twin engine
+    oracle, _, _ = make_engine(aggregate="fused")
+    seq = oracle.serve_all([ServeRequest(s, x)
+                            for s, x in zip(states, xs)])
+    decided = engine.decide_entries(states)
+    entries = [pe for _, pe, _ in decided]
+    assert len({engine.entry_bucket(e) for e in entries}) == 1
+    plans, fwd = engine.cross_batched_forward(entries)
+    outs = gather_multi(plans, np.asarray(
+        fwd(scatter_multi(plans, xs), engine.params)))
+    for res, out in zip(seq, outs):
+        assert float(np.abs(out - res.output).max()) == 0.0
+
+
+def test_cross_batched_forward_is_cached_on_member_keys():
+    engine, state, rng = make_engine()
+    states = [state, perturb_scenario(rng, state, 0.2)]
+    entries = [pe for _, pe, _ in engine.decide_entries(states)]
+    plans1, fwd1 = engine.cross_batched_forward(entries)
+    plans2, fwd2 = engine.cross_batched_forward(entries)
+    assert fwd1 is fwd2 and plans1 is plans2

@@ -18,8 +18,8 @@ from repro.serve import (AdmitAll, LyapunovAdmission, ManualClock,
                          StaticPriorityAdmission, StreamRequest,
                          StreamingFrontend, poisson_workload)
 from repro.serve.frontend import (REJECT_ADMISSION, REJECT_DEADLINE,
-                                  REJECT_QUEUE_FULL)
-from repro.serve.metrics import percentiles, summarize
+                                  REJECT_QUEUE_FULL, _bucket)
+from repro.serve.metrics import CycleTelemetry, percentiles, summarize
 
 
 def make_engine(seed=0, capacity=24, users=18, m=3, e=40, **engine_kw):
@@ -238,6 +238,197 @@ def test_request_timing_phases_and_percentiles():
     assert s["sustained_rps"] == pytest.approx(1.0)    # span 1.0→3.0
     assert s["total"]["max"] == 1.0
     assert summarize([]) == {"served": 0, "sustained_rps": 0.0}
+
+
+def test_bucket_cap_semantics():
+    """Property-pinned _bucket contract: the result is always ≥ b (the cap
+    bounds padding — it must never shrink a batch below the members
+    already in it), never exceeds max(b, max_batch), and for b within the
+    front-end's own limit it is the smallest power of two ≥ b capped at
+    max_batch."""
+    for max_batch in (1, 2, 3, 4, 8, 12, 16):
+        prev = 0
+        for b in range(1, 3 * max_batch + 2):
+            got = _bucket(b, max_batch)
+            assert got >= b                          # never truncates
+            assert got <= max(b, max_batch)          # cap honored
+            assert got >= prev                       # monotone in b
+            prev = got
+            if b <= max_batch:
+                assert got <= max_batch
+                pow2 = 1 << (b - 1).bit_length()
+                assert got == min(pow2, max_batch)
+            else:
+                assert got == b                      # oversize passes thru
+
+
+# -- cross-topology batching --------------------------------------------------
+
+def test_cross_topology_single_dispatch_serves_mixed_batch():
+    """With cross_topology=True one pump cycle serves requests on
+    different (same-bucket) topologies as ONE cross dispatch — and each
+    member still matches its own topology's oracle."""
+    engine, state, rng = make_engine()
+    others = [perturb_scenario(rng, state, 0.2) for _ in range(2)]
+    fe = StreamingFrontend(engine=engine, queue_depth=16, max_batch=8,
+                           cross_topology=True,
+                           clock=ManualClock(tick_per_now=0.01))
+    for s in (state, others[0], state, others[1]):
+        assert fe.submit(req(s, rng))
+    results = fe.pump()
+    assert len(results) == 4
+    assert fe.stats.cross_batches == 1
+    assert fe.stats.cross_batched_requests == 4
+    assert len(fe.queue) == 0 and fe.stats.conservation_ok
+    for r in results:
+        assert oracle_err(engine, r) < 1e-4
+
+
+def test_cross_topology_run_matches_sequential_engine_exactly():
+    """End to end: a stream alternating over perturbed topologies served
+    cross-topology is bit-exact against the sequential ServingEngine
+    oracle (aggregate pinned so both sides run the identical kernel)."""
+    engine, state, rng = make_engine(aggregate="fused")
+    topos = [state] + [perturb_scenario(rng, state, 0.25)
+                       for _ in range(3)]
+    reqs = [req(topos[i % len(topos)], rng) for i in range(12)]
+    fe = StreamingFrontend(engine=engine, queue_depth=32, max_batch=8,
+                           cross_topology=True)
+    results = fe.run([(0.0, r) for r in reqs])
+    assert len(results) == 12 and fe.stats.cross_batches >= 1
+    from repro.serve.engine import ServeRequest
+    oracle_engine, _, _ = make_engine(aggregate="fused")
+    by_rid = {r.rid: r for r in results}
+    seq = oracle_engine.serve_all(
+        [ServeRequest(r.state, r.x) for r in reqs])
+    for rid, res in enumerate(seq):
+        assert float(np.abs(by_rid[rid].output - res.output).max()) == 0.0
+    assert fe.stats.conservation_ok and fe.stats.deferred == 0
+
+
+def test_cross_topology_off_keeps_topology_gate():
+    """cross_topology=False (the default) preserves the PR 6 behavior:
+    only the head's topology joins a cycle."""
+    engine, state, rng = make_engine()
+    other = perturb_scenario(rng, state, 0.6)
+    fe = StreamingFrontend(engine=engine, queue_depth=16, max_batch=8,
+                           clock=ManualClock(tick_per_now=0.01))
+    for s in (state, other, state):
+        assert fe.submit(req(s, rng))
+    assert len(fe.pump()) == 2 and fe.stats.cross_batches == 0
+    assert len(fe.queue) == 1
+
+
+# -- weighted tenant shares ---------------------------------------------------
+
+def test_lyapunov_weighted_shares_drain_proportionally():
+    adm = LyapunovAdmission(num_tenants=2, idle_drain=1.0,
+                            weights={0: 3.0, 1: 1.0})
+    adm.q = {0: 1.0, 1: 1.0}
+    adm.on_cycle(served=0, now=0.0)       # capacity 1.0 split 3:1
+    assert adm.q[0] == pytest.approx(0.25)
+    assert adm.q[1] == pytest.approx(0.75)
+    with pytest.raises(ValueError):
+        LyapunovAdmission(weights={0: 0.0})
+
+
+def test_lyapunov_starvation_bound_holds():
+    """A deferred tenant re-enters the admit region within the analytic
+    starvation bound even when every cycle is idle (worst case: drain is
+    only the guaranteed minimum share)."""
+    adm = LyapunovAdmission(num_tenants=3, theta=1.0, idle_drain=1.0,
+                            weights={2: 0.5})
+    start = 6.0
+    adm.q = {2: start}
+    adm.queue_max = start
+    bound = adm.starvation_bound(2)
+    assert bound == int(np.ceil((start - adm.theta)
+                                / (1.0 * 0.5 / 2.5)))
+    cycles = 0
+    while adm.q[2] > adm.theta:
+        adm.on_cycle(served=0, now=float(cycles))
+        cycles += 1
+        assert cycles <= bound
+    assert cycles <= bound
+    # a heavier tenant's bound is proportionally tighter
+    assert adm.starvation_bound(0, backlog=start) < bound
+
+
+def test_lyapunov_weighted_tenant_admits_more_under_contention():
+    """Under a symmetric two-tenant flood, the weight-4 tenant's admitted
+    share exceeds the weight-1 tenant's."""
+    engine, state, rng = make_engine()
+    adm = LyapunovAdmission(num_tenants=2, theta=1.5, idle_drain=1.0,
+                            weights={0: 4.0, 1: 1.0})
+    fe = StreamingFrontend(engine=engine, queue_depth=64, max_batch=2,
+                           admission=adm,
+                           clock=ManualClock(tick_per_now=0.01))
+    served = {0: 0, 1: 0}
+    for cycle in range(30):
+        for tenant in (0, 1):
+            fe.submit(req(state, rng, tenant=tenant))
+        for r in fe.pump():
+            served[r.request.tenant] += 1
+    assert served[0] > served[1] > 0
+    assert fe.stats.conservation_ok
+
+
+# -- decide-stage telemetry ---------------------------------------------------
+
+def test_cycle_telemetry_histogram_and_decide_percentiles():
+    t = CycleTelemetry()
+    for b, d in ((4, 0.2), (4, 0.4), (2, 0.1), (1, 0.3)):
+        t.record(b, d)
+    d = t.as_dict()
+    assert d["cycles"] == 4
+    assert d["batch_hist"] == {"1": 1, "2": 1, "4": 2}
+    assert d["batch_mean"] == pytest.approx(2.75)
+    assert d["decide"]["p50"] == pytest.approx(0.25)
+    assert d["decide"]["p95"] == pytest.approx(
+        float(np.percentile([0.2, 0.4, 0.1, 0.3], 95)))
+    assert d["decide_per_request"]["max"] == pytest.approx(0.3)
+
+
+def test_frontend_records_cycle_telemetry_under_manual_clock():
+    """The front-end logs one telemetry sample per non-empty cycle with
+    deterministic ManualClock decide latencies (admit→dispatch = the
+    fixed per-now tick) and the per-cycle batch sizes."""
+    engine, state, rng = make_engine()
+    fe = StreamingFrontend(engine=engine, queue_depth=16, max_batch=4,
+                           clock=ManualClock(tick_per_now=0.01))
+    for _ in range(6):
+        assert fe.submit(req(state, rng))
+    fe.pump()
+    fe.pump()
+    d = fe.cycles.as_dict()
+    assert d["cycles"] == 2
+    assert d["batch_hist"] == {"2": 1, "4": 1}
+    # ManualClock: every now() call advances 0.01; the decide phase spans
+    # a fixed number of calls, so p50 == p95 deterministically
+    assert d["decide"]["p50"] == pytest.approx(d["decide"]["p95"])
+    assert d["decide"]["p50"] > 0
+    assert fe.stats_dict()["cycles"]["cycles"] == 2
+
+
+# -- concurrent intake --------------------------------------------------------
+
+def test_run_threaded_overlaps_intake_and_serves_everything():
+    """The threaded driver (producer thread + pump loop) drains a Poisson
+    workload with full conservation and oracle-correct outputs."""
+    engine, state, rng = make_engine()
+    other = perturb_scenario(rng, state, 0.3)
+    fe = StreamingFrontend(engine=engine, queue_depth=64, max_batch=8,
+                           cross_topology=True)
+    wl = poisson_workload(
+        rng, rate=500.0, count=30,
+        make_request=lambda i: req((state, other)[i % 2], rng,
+                                   tenant=i % 3))
+    results = fe.run_threaded(wl)
+    assert len(results) == 30
+    assert fe.stats.submitted == 30
+    assert sorted(r.rid for r in results) == list(range(30))
+    assert fe.stats.conservation_ok and fe.stats.deferred == 0
+    assert max(oracle_err(engine, r) for r in results) < 1e-4
 
 
 def test_run_drains_open_loop_poisson_workload():

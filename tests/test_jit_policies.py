@@ -144,6 +144,50 @@ def test_jit_step_fn_runs_under_jit_and_scan():
                                       d.partition.subgraph)
 
 
+def test_step_batch_matches_sequential_step():
+    """step_batch — the streaming cycle's single vmapped decide+cost call
+    — is assignment-exact against per-state step() and shares its
+    partition cache; non-jit policies and B=1 fall back cleanly."""
+    state, net = scenario(users=14)
+    ctrl = GraphEdgeController(net=net, policy="greedy_jit")
+    rng = np.random.default_rng(9)
+    states = [state] + [perturb_scenario(rng, state, 0.3)
+                        for _ in range(3)]
+    eager = [ctrl.step(s) for s in states]
+    batched = ctrl.step_batch(states)
+    assert len(batched) == len(eager)
+    for d_e, d_b in zip(eager, batched):
+        np.testing.assert_array_equal(d_b.servers, d_e.servers)
+        np.testing.assert_array_equal(d_b.partition.subgraph,
+                                      d_e.partition.subgraph)
+        assert np.isclose(float(d_b.cost.c), float(d_e.cost.c), rtol=1e-5)
+        assert d_b.topo_key == d_e.topo_key
+    assert ctrl.step_batch([]) == []
+    assert len(ctrl.step_batch([state])) == 1
+    # greedy (non-jit) silently takes the sequential road
+    seq_ctrl = GraphEdgeController(net=net, policy="greedy")
+    assert len(seq_ctrl.step_batch(states)) == len(states)
+
+
+def test_jit_step_batch_fn_is_vmapped_step_fn():
+    """jit_step_batch_fn over stacked states == per-state jit_step_fn."""
+    state, net = scenario(users=12)
+    ctrl = GraphEdgeController(net=net, policy="greedy_jit",
+                               partitioner="hicut_jax")
+    rng = np.random.default_rng(11)
+    states = [state] + [perturb_scenario(rng, state, 0.4)
+                        for _ in range(2)]
+    res = jax.jit(ctrl.jit_step_batch_fn())(stack_states(states))
+    assert isinstance(res, JitStepResult)
+    fn = ctrl.jit_step_fn()
+    for i, s in enumerate(states):
+        one = fn(s)
+        np.testing.assert_array_equal(np.asarray(res.servers[i]),
+                                      np.asarray(one.servers))
+        assert np.isclose(float(res.cost.c[i]), float(one.cost.c),
+                          rtol=1e-6)
+
+
 def test_jit_step_fn_result_type():
     state, net = scenario()
     ctrl = GraphEdgeController(net=net, policy="local_jit")
