@@ -41,8 +41,11 @@ def warn_stale_benches(root: pathlib.Path | None = None) -> list[str]:
     checked-in ``BENCH_*.json`` whose stamped ``git`` describe no longer
     matches the current tree — i.e. numbers generated at an older commit —
     **or** whose stamp carries a ``-dirty`` suffix, meaning the numbers came
-    from an uncommitted tree and no commit can reproduce them. (The current
-    tree being dirty is fine — only the *stamp* must be clean and match.)
+    from an uncommitted tree and no commit can reproduce them, **or** whose
+    ``schema`` field predates :data:`BENCH_SCHEMA_VERSION` — old-schema
+    records would otherwise silently pass the smoke gates with fields the
+    current readers misinterpret. (The current tree being dirty is fine —
+    only the *stamp* must be clean and match.)
     "Current tree" means the last commit touching anything *but*
     ``BENCH_*.json``: committing freshly regenerated BENCH files moves
     HEAD, so the stamp (taken before that commit) is compared against the
@@ -58,10 +61,17 @@ def warn_stale_benches(root: pathlib.Path | None = None) -> list[str]:
     stale = []
     for path in sorted(root.glob("BENCH_*.json")):
         try:
-            stamped = json.loads(path.read_text()).get("git", "unknown")
+            payload = json.loads(path.read_text())
+            stamped = payload.get("git", "unknown")
+            schema = payload.get("schema")
         except (OSError, json.JSONDecodeError):
-            stamped = "unreadable"
-        if stamped.endswith("-dirty"):
+            stamped, schema = "unreadable", BENCH_SCHEMA_VERSION
+        if schema != BENCH_SCHEMA_VERSION:
+            stale.append(path.name)
+            print(f"# WARNING: {path.name} carries schema {schema!r} but "
+                  f"the writer is at {BENCH_SCHEMA_VERSION!r} — regenerate "
+                  f"before trusting its records")
+        elif stamped.endswith("-dirty"):
             stale.append(path.name)
             print(f"# WARNING: {path.name} stamped {stamped!r} — numbers "
                   f"from an uncommitted tree, regenerate at a clean HEAD")

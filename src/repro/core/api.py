@@ -533,7 +533,8 @@ class Decision:
     def servers(self) -> np.ndarray:
         return self.assignment.servers
 
-    def to_partition_plan(self, num_devices: int | None = None):
+    def to_partition_plan(self, num_devices: int | None = None,
+                          exchange: str = "gather"):
         """Bridge into serving: decision → halo-exchange PartitionPlan.
 
         The offload assignment (user → server) becomes the vertex → device
@@ -541,14 +542,19 @@ class Decision:
         :func:`repro.gnn.distributed.distributed_gcn_forward`. Plans are
         built through the sparse O(E) edge-list path — no N×N work — so
         serving stays viable at PubMed-scale layouts; the forward picks the
-        gather aggregation automatically for such plans."""
+        gather aggregation automatically for such plans. ``exchange``
+        selects the halo layout: ``"gather"`` (all_gather of each device's
+        boundary union — the single-host default) or ``"pair"`` (all_to_all
+        over exactly the cut edges — the multi-host wire format, see
+        ``repro.gnn.multihost``)."""
         from repro.gnn.distributed import make_partition_plan_sparse
         m = int(np.asarray(self.cost.t_tran).shape[0])
         p = m if num_devices is None else num_devices
         assign = np.asarray(self.servers, np.int64).copy()
         assign[assign >= 0] %= p
         return make_partition_plan_sparse(state_edges(self.state), assign,
-                                          p, n=self.state.capacity)
+                                          p, n=self.state.capacity,
+                                          exchange=exchange)
 
     def summary(self) -> dict:
         """Flat dict in the legacy ``GraphEdge.offload`` result format."""

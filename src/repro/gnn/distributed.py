@@ -55,6 +55,18 @@ class PartitionPlan:
     mask: np.ndarray           # [P, L] active-vertex mask per slot
     adj_ext: np.ndarray | None = None   # dense [P, L, L+P*B] blocks (lazy)
 
+    # Two exchange layouts share this dataclass (DESIGN.md §8):
+    #  * "gather" — send_idx/send_mask are [P, B]: every device publishes
+    #    the union of its boundary rows, all-gathered to every peer.
+    #  * "pair" — send_idx/send_mask are [P, P, B]: entry [q, p] lists the
+    #    rows device q sends to device p, exchanged with one all_to_all
+    #    over exactly the cut edges — no row travels to a device that
+    #    doesn't read it. ``halo`` is then the max *per-pair* send count.
+
+    @property
+    def exchange(self) -> str:
+        return "pair" if self.send_idx.ndim == 3 else "gather"
+
     @property
     def padded_n(self) -> int:
         return self.num_devices * self.block
@@ -80,10 +92,22 @@ class PartitionPlan:
 
     def bytes_per_aggregate(self, feature_dim: int,
                             dtype_bytes: int = 4) -> int:
-        """All-gather traffic per layer: every device receives the other
-        devices' halo buffers (ring all-gather model)."""
+        """Cross-device traffic per layer. "gather" layout: every device
+        receives the other devices' [B, F] halo buffers (ring all-gather
+        model). "pair" layout: the all_to_all moves one [B, F] chunk per
+        *ordered pair* of distinct devices — same formula, but B is the
+        per-pair send bound, which only counts rows the receiver reads."""
         p, b = self.num_devices, self.halo
         return p * (p - 1) * b * feature_dim * dtype_bytes
+
+    def replicate_bytes_per_aggregate(self, feature_dim: int,
+                                      dtype_bytes: int = 4) -> int:
+        """Traffic of the replicate-everything baseline: every device ships
+        its whole [L, F] block to every peer each layer — what serving
+        would pay without the halo layout (the multihost bench's
+        denominator)."""
+        p = self.num_devices
+        return p * (p - 1) * self.block * feature_dim * dtype_bytes
 
     def dense_adj_ext(self) -> np.ndarray:
         """Materialize (and memoize) the dense [P, L, L+P*B] blocks from the
@@ -140,15 +164,21 @@ class PartitionPlan:
 
 def make_partition_plan_sparse(edges: np.ndarray, assign: np.ndarray,
                                num_devices: int, n: int | None = None,
-                               weights: np.ndarray | None = None
-                               ) -> PartitionPlan:
+                               weights: np.ndarray | None = None,
+                               exchange: str = "gather") -> PartitionPlan:
     """Build the halo-exchange plan from a COO edge list — O(E), no N×N.
 
     ``edges`` is [E, 2] *unique undirected* pairs (i ≠ j, any order); an
     optional ``weights`` [E] carries per-edge values (default 1.0).
-    Semantics match :func:`make_partition_plan_dense_reference` exactly:
-    same perm (owned vertices ascending per device), same boundary order,
-    same extended-column layout."""
+    With ``exchange="gather"`` semantics match
+    :func:`make_partition_plan_dense_reference` exactly: same perm (owned
+    vertices ascending per device), same boundary order, same
+    extended-column layout. ``exchange="pair"`` builds the halo-only
+    layout instead: per-(sender, receiver) send lists and extended columns
+    addressing the all_to_all receive buffer, so cross-device traffic is
+    exactly the cut rows (see :class:`PartitionPlan`)."""
+    if exchange not in ("gather", "pair"):
+        raise ValueError(f"unknown exchange {exchange!r}")
     assign = np.asarray(assign, np.int64)
     n = len(assign) if n is None else int(n)
     assert len(assign) == n, (len(assign), n)
@@ -177,27 +207,50 @@ def make_partition_plan_sparse(edges: np.ndarray, assign: np.ndarray,
     src = np.concatenate([i[keep], j[keep]])
     dst = np.concatenate([j[keep], i[keep]])
     w2 = np.concatenate([w[keep], w[keep]])
-
-    # boundary rows: owned vertices with ≥1 cross-device edge
     cross = assign[src] != assign[dst]
-    is_boundary = np.zeros(n, bool)
-    is_boundary[src[cross]] = True
-    b_ids = np.nonzero(is_boundary)[0]           # ascending global id
-    b_order = np.argsort(assign[b_ids], kind="stable")
-    b_sorted = b_ids[b_order]
-    b_dev = assign[b_sorted]
-    b_rank, b_counts = rank_within_sorted_groups(b_dev, num_devices)
-    halo = max(1, int(b_counts.max(initial=0)))
-    send_idx = np.zeros((num_devices, halo), np.int64)
-    send_mask = np.zeros((num_devices, halo), np.float32)
-    send_idx[b_dev, b_rank] = local_slot[b_sorted]
-    send_mask[b_dev, b_rank] = 1.0
-    halo_of = -np.ones(n, np.int64)              # flat halo-buffer position
-    halo_of[b_sorted] = b_dev * halo + b_rank
 
-    # extended columns: own-block slot for intra-device edges, halo position
-    # (offset by the block) for cross-device edges
-    col = np.where(cross, block + halo_of[dst], local_slot[dst])
+    if exchange == "pair":
+        # per-ordered-pair send lists: device q sends row u to device p iff
+        # some row p owns has u as a cross neighbor. One sorted unique pass
+        # over (q, p, u) keys yields each list in ascending-global-id order.
+        cq = assign[dst[cross]]                  # sender (owns the row)
+        cp = assign[src[cross]]                  # receiver (reads the row)
+        key = (cq * num_devices + cp) * n + dst[cross]
+        uniq = np.unique(key)
+        uq, rem = np.divmod(uniq, num_devices * n)
+        up, uu = np.divmod(rem, n)
+        p_rank, p_counts = rank_within_sorted_groups(
+            uq * num_devices + up, num_devices * num_devices)
+        halo = max(1, int(p_counts.max(initial=0)))
+        send_idx = np.zeros((num_devices, num_devices, halo), np.int64)
+        send_mask = np.zeros((num_devices, num_devices, halo), np.float32)
+        send_idx[uq, up, p_rank] = local_slot[uu]
+        send_mask[uq, up, p_rank] = 1.0
+        # receive-buffer position of each cross edge's source row: the
+        # receiver's all_to_all output stacks sender chunks [q, s, F], so
+        # the extended column is block + q·halo + rank-in-(q→p)-list
+        halo_col = cq * halo + p_rank[np.searchsorted(uniq, key)]
+        col = local_slot[dst].copy()
+        col[cross] = block + halo_col
+    else:
+        # boundary rows: owned vertices with ≥1 cross-device edge publish
+        # once, to everyone (union of destinations)
+        is_boundary = np.zeros(n, bool)
+        is_boundary[src[cross]] = True
+        b_ids = np.nonzero(is_boundary)[0]       # ascending global id
+        b_order = np.argsort(assign[b_ids], kind="stable")
+        b_sorted = b_ids[b_order]
+        b_dev = assign[b_sorted]
+        b_rank, b_counts = rank_within_sorted_groups(b_dev, num_devices)
+        halo = max(1, int(b_counts.max(initial=0)))
+        send_idx = np.zeros((num_devices, halo), np.int64)
+        send_mask = np.zeros((num_devices, halo), np.float32)
+        send_idx[b_dev, b_rank] = local_slot[b_sorted]
+        send_mask[b_dev, b_rank] = 1.0
+        halo_of = -np.ones(n, np.int64)          # flat halo-buffer position
+        halo_of[b_sorted] = b_dev * halo + b_rank
+        col = np.where(cross, block + halo_of[dst], local_slot[dst])
+
     flat_row = assign[src] * block + local_slot[src]
     nbr_idx, nbr_val = padded_neighbors_from_coo(flat_row, col, w2,
                                                  num_devices * block)
@@ -306,8 +359,11 @@ def plan_bucket(plan: PartitionPlan,
     padded (:func:`pad_plan`) to identical array shapes and served by one
     dispatch of :func:`_forward_blocks_multi` — the bucket tuple *is* the
     cross-topology batch key (the jit cache then keys on these shapes)."""
-    return (plan.num_devices, plan.n, _ceil_to(plan.block, quantum),
+    base = (plan.num_devices, plan.n, _ceil_to(plan.block, quantum),
             _ceil_to(plan.halo, quantum), _ceil_to(plan.max_degree, quantum))
+    # the two exchange layouts are never batch-compatible: same dims mean
+    # different extended-column semantics, so pair plans get their own key
+    return base + (("pair",) if plan.exchange == "pair" else ())
 
 
 def pad_plan(plan: PartitionPlan, block: int, halo: int,
@@ -329,10 +385,12 @@ def pad_plan(plan: PartitionPlan, block: int, halo: int,
                                    (plan.block, plan.halo, plan.max_degree))
     perm = -np.ones((p, block), np.int64)
     perm[:, :plan.block] = plan.perm.reshape(p, plan.block)
-    send_idx = np.zeros((p, halo), np.int64)
-    send_idx[:, :plan.halo] = plan.send_idx
-    send_mask = np.zeros((p, halo), np.float32)
-    send_mask[:, :plan.halo] = plan.send_mask
+    # send maps pad on the slot axis only — [P, H] (gather) and [P, P, H]
+    # (pair) both keep their leading layout axes
+    send_idx = np.zeros(plan.send_idx.shape[:-1] + (halo,), np.int64)
+    send_idx[..., :plan.halo] = plan.send_idx
+    send_mask = np.zeros(plan.send_mask.shape[:-1] + (halo,), np.float32)
+    send_mask[..., :plan.halo] = plan.send_mask
     mask = np.zeros((p, block), np.float32)
     mask[:, :plan.block] = plan.mask
     # neighbor slots: remap extended cols into the widened layout, then pad
@@ -353,9 +411,10 @@ def pad_plan(plan: PartitionPlan, block: int, halo: int,
 
 def pad_plan_to_bucket(plan: PartitionPlan, bucket: tuple) -> PartitionPlan:
     """Pad a plan to its (or a compatible) :func:`plan_bucket` shape."""
-    p, n, block, halo, k = bucket
-    assert (p, n) == (plan.num_devices, plan.n), (bucket, plan.num_devices,
-                                                  plan.n)
+    p, n, block, halo, k = bucket[:5]
+    exch = bucket[5] if len(bucket) > 5 else "gather"
+    assert (p, n, plan.exchange) == (plan.num_devices, plan.n, exch), \
+        (bucket, plan.num_devices, plan.n, plan.exchange)
     return pad_plan(plan, block, halo, k)
 
 
@@ -384,10 +443,24 @@ def gather_multi(plans: Sequence[PartitionPlan], blocks: np.ndarray,
 
 
 def _halo_exchange(x_blk, send_idx, send_mask, axis: str):
-    """Publish boundary rows and all-gather every device's halo buffer:
-    [L, F] → extended rows [L + P·B, F]."""
-    published = x_blk[send_idx] * send_mask[:, None]
-    halo = jax.lax.all_gather(published, axis)        # [P, B, F]
+    """Exchange boundary rows: [L, F] → extended rows [L + P·B, F].
+
+    Dispatches on the send map's rank (static at trace time, so every
+    jitted forward gains both paths without signature changes):
+
+    * gather layout (``send_idx`` [B]): publish the boundary-row union
+      once and ``all_gather`` every device's buffer — each device receives
+      P·B rows whether it reads them or not.
+    * pair layout (``send_idx`` [P, B]): build one [B, F] chunk per
+      destination and ``all_to_all`` them — device p's chunk q holds
+      exactly the rows q sends to p, so the wire carries only cut rows
+      and the receive buffer is already in extended-column order."""
+    if send_idx.ndim == 2:
+        published = x_blk[send_idx] * send_mask[..., None]   # [P, B, F]
+        halo = jax.lax.all_to_all(published, axis, 0, 0)     # [P, B, F]
+    else:
+        published = x_blk[send_idx] * send_mask[:, None]
+        halo = jax.lax.all_gather(published, axis)           # [P, B, F]
     return jnp.concatenate([x_blk, halo.reshape(-1, halo.shape[-1])], 0)
 
 
@@ -490,14 +563,21 @@ def _plan_consts(plan: PartitionPlan, aggregate: str):
                                                              1e-9)), 0.0)
     dinv = dinv.astype(np.float32)
     # extended column scales: own block + halo rows (their global dinv).
-    # The halo segment is the same on every device: slot (q, s) of the
-    # flattened buffer holds the row published from device q's send_idx[q,s].
     dinv_flat = dinv.reshape(-1)                       # per (p, local)
-    src_slots = np.arange(p_dev)[:, None] * block + plan.send_idx
-    cs_halo = (dinv_flat[src_slots] * plan.send_mask).reshape(-1)
-    cs_ext = np.concatenate([dinv, np.broadcast_to(cs_halo,
-                                                   (p_dev, p_dev * halo))],
-                            axis=1).astype(np.float32)
+    if plan.exchange == "pair":
+        # per-destination halo segments: device p's slot (q, s) holds the
+        # row q sends *to p* (send_idx[q, p, s]) — each device has its own
+        # receive buffer, unlike the broadcast gather layout below
+        src_slots = np.arange(p_dev)[:, None, None] * block + plan.send_idx
+        vals = dinv_flat[src_slots] * plan.send_mask   # [q, p, s]
+        cs_halo = vals.transpose(1, 0, 2).reshape(p_dev, p_dev * halo)
+    else:
+        # the halo segment is the same on every device: slot (q, s) of the
+        # flat buffer holds the row published from device q's send_idx[q,s]
+        src_slots = np.arange(p_dev)[:, None] * block + plan.send_idx
+        flat = (dinv_flat[src_slots] * plan.send_mask).reshape(-1)
+        cs_halo = np.broadcast_to(flat, (p_dev, p_dev * halo))
+    cs_ext = np.concatenate([dinv, cs_halo], axis=1).astype(np.float32)
 
     if aggregate == "dense":
         # add self-loops to the extended adjacency (own-block diagonal)

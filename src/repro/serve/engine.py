@@ -37,11 +37,16 @@ from jax.sharding import Mesh
 from repro.core.api import (CacheInfo, Decision, GraphEdgeController,
                             LruCache, topology_key)
 from repro.core.dynamic_graph import GraphState
-from repro.gnn.distributed import (PartitionPlan, PlanConsts,
+from repro.gnn.distributed import (PLAN_BUCKET_QUANTUM, PartitionPlan,
+                                   PlanConsts, _ceil_to,
                                    make_batched_forward_fn, make_forward_fn,
                                    make_multi_forward_fn, pad_plan_to_bucket,
                                    plan_bucket, prepare_plan_consts,
                                    resolve_aggregate)
+
+# adaptive bucket quantums: per-family quantums double up to this cap
+PLAN_BUCKET_QUANTUM_CAP = 64
+_FAMILY_HIST_MAX = 64                # distinct halo widths kept per family
 
 
 @dataclass(frozen=True)
@@ -76,13 +81,42 @@ class PlanEntry:
     for cross-topology batches, the plan padded to its shape bucket with
     its stackable forward constants (``padded``: bucket → (plan, consts)).
     All lazily-built members stay with the entry, so they age out of the
-    LRU together with the plan."""
+    LRU together with the plan. ``bucket`` memoizes the shape bucket along
+    with the family quantum it was computed at (``bucket_quantum``), so the
+    engine can re-bucket the entry when its family's quantum adapts."""
     key: tuple[str, str]
     plan: PartitionPlan
     forward: Callable
     batched: Callable | None = None
     bucket: tuple | None = None
+    bucket_quantum: int | None = None
     padded: dict = field(default_factory=dict)
+
+
+@dataclass
+class BucketFamily:
+    """Running halo histogram + adaptive quantum for one ``(P, n, block')``
+    plan-shape family (:meth:`ServingEngine.entry_bucket`)."""
+    hist: dict = field(default_factory=dict)   # halo width → count
+    quantum: int = PLAN_BUCKET_QUANTUM
+
+    def observe(self, halo: int) -> int:
+        """Record a halo width; returns the (possibly widened) quantum.
+
+        The quantum doubles (cap :data:`PLAN_BUCKET_QUANTUM_CAP`) until
+        the family's observed min/max halo land in ONE bucket. Doubling
+        only ever *merges* buckets — two widths sharing a ceiling at
+        quantum q share it at 2q — so adaptation never splits a batch
+        group that already formed, and re-bucketed entries join, never
+        leave, their hot family bucket."""
+        if halo not in self.hist and len(self.hist) >= _FAMILY_HIST_MAX:
+            self.hist.pop(min(self.hist, key=self.hist.get))
+        self.hist[halo] = self.hist.get(halo, 0) + 1
+        lo, hi = min(self.hist), max(self.hist)
+        while _ceil_to(lo, self.quantum) != _ceil_to(hi, self.quantum) \
+                and self.quantum < PLAN_BUCKET_QUANTUM_CAP:
+            self.quantum *= 2
+        return self.quantum
 
 
 @dataclass
@@ -100,12 +134,16 @@ class ServingEngine:
     num_devices: int | None = None
     plan_cache_size: int = 16
     aggregate: str = "auto"
+    exchange: str = "gather"      # halo layout: "gather" | "pair"
+                                  # (pair = cut-edges-only all_to_all, the
+                                  # multi-host wire — repro.gnn.multihost)
 
     def __post_init__(self):
         if self.num_devices is None:
             self.num_devices = int(np.prod(list(self.mesh.shape.values())))
         self._plan_cache = LruCache(self.plan_cache_size)
         self._multi_cache = LruCache(self.plan_cache_size)
+        self._bucket_families: dict[tuple, BucketFamily] = {}
 
     # -- control + plan stage ------------------------------------------------
     def _plan_for(self, decision: Decision) -> tuple[PlanEntry, bool]:
@@ -120,7 +158,8 @@ class ServingEngine:
         hit = self._plan_cache.get(key)
         if hit is not None:
             return hit, True
-        plan = decision.to_partition_plan(self.num_devices)
+        plan = decision.to_partition_plan(self.num_devices,
+                                          exchange=self.exchange)
         forward = make_forward_fn(self.mesh, self.axis, plan, self.aggregate)
         entry = PlanEntry(key, plan, forward)
         self._plan_cache.put(key, entry)
@@ -165,10 +204,25 @@ class ServingEngine:
     # -- cross-topology batching ---------------------------------------------
     def entry_bucket(self, entry: PlanEntry) -> tuple:
         """The entry's shape bucket (:func:`plan_bucket`) — the batch key
-        for cross-topology continuous batching (computed once, kept on the
-        entry)."""
+        for cross-topology continuous batching.
+
+        The quantum is **adaptive per plan-shape family** ``(P, n,
+        block')``: each family keeps a small running histogram of the halo
+        widths it has served (:class:`BucketFamily`) and doubles its
+        quantum until the observed spread fits one bucket — a hot family
+        whose halos straddle a fixed ``PLAN_BUCKET_QUANTUM`` boundary
+        (e.g. 7 vs 9) no longer splits into two buckets and halves its
+        batch size. Memoized on the entry together with the quantum it
+        was computed at, so entries re-bucket when their family adapts."""
+        plan = entry.plan
+        fam_key = (plan.num_devices, plan.n,
+                   _ceil_to(plan.block, PLAN_BUCKET_QUANTUM))
+        fam = self._bucket_families.setdefault(fam_key, BucketFamily())
         if entry.bucket is None:
-            entry.bucket = plan_bucket(entry.plan)
+            fam.observe(plan.halo)        # first sighting joins the family
+        if entry.bucket_quantum != fam.quantum:
+            entry.bucket = plan_bucket(plan, fam.quantum)
+            entry.bucket_quantum = fam.quantum
         return entry.bucket
 
     def _padded_member(self, entry: PlanEntry, bucket: tuple

@@ -162,7 +162,10 @@ class AdmissionController(Protocol):
     """Admit/defer/reject decision per candidate request, once per cycle.
 
     ``decide`` sees the candidate entry, the current tick, the queue
-    backlog and the front-end's per-request service-time estimate;
+    backlog and the front-end's *amortized* per-request service-time
+    estimate (the batched ``decide_entries`` cycle cost spread over the
+    batch the backlog supports, plus the per-request forward cost —
+    :meth:`StreamingFrontend.est_service`);
     ``on_cycle(served, now)`` is called once per scheduling cycle with the
     number of requests just serviced (0 for an idle/all-deferred cycle) so
     queue-state controllers can drain."""
@@ -399,10 +402,30 @@ class StreamingFrontend:
         self.rejections: list[Rejection] = []
         self.timings: list[RequestTiming] = []
         self.cycles = CycleTelemetry()
-        self._est_service = 0.0      # per-request service-time estimate
+        self._est_decide = 0.0       # per-CYCLE batched decide cost (EWMA)
+        self._est_forward = 0.0      # per-REQUEST dispatch+fetch cost (EWMA)
         self._next_rid = 0
         self._lock = threading.Lock()   # guards queue + stats + telemetry
         self._topo_memo = LruCache(1024)
+
+    def _ewma(self, old: float, sample: float) -> float:
+        return sample if old == 0.0 else \
+            (1 - self.service_ewma) * old + self.service_ewma * sample
+
+    def est_service(self, backlog: int) -> float:
+        """Amortized per-request service estimate at the given backlog.
+
+        The cycle's ONE vmapped ``decide_entries`` call costs the same
+        whether it decides 1 or ``max_batch`` requests, so its EWMA
+        (``_est_decide``, per cycle) is spread over the batch the current
+        backlog supports — charging every candidate the *full* decide
+        cost (the old behaviour) made admission under overload
+        systematically pessimistic, shedding requests whose deadline the
+        batched cycle would comfortably meet. The per-request
+        dispatch+fetch cost (``_est_forward``) is genuinely per request
+        and is charged whole."""
+        share = min(max(backlog, 1), self.max_batch)
+        return self._est_decide / share + self._est_forward
 
     def _topo_key_of(self, state: GraphState) -> str:
         """Topology fingerprint, memoized on state *identity*: streaming
@@ -461,6 +484,7 @@ class StreamingFrontend:
         with self._lock:
             now = self.clock.now()
             backlog = len(self.queue)
+            est_service = self.est_service(backlog)
             batch: list[_Entry] = []
             survivors: list[_Entry] = []
             head_topo: str | None = None
@@ -476,7 +500,7 @@ class StreamingFrontend:
                     survivors.append(entry)
                     continue
                 verdict = self.admission.decide(entry, now, backlog,
-                                                self._est_service)
+                                                est_service)
                 if verdict == ADMIT:
                     entry.timing.admit = now
                     batch.append(entry)
@@ -512,6 +536,7 @@ class StreamingFrontend:
         topos = list(by_topo)
         decided = dict(zip(topos, self.engine.decide_entries(
             [by_topo[t][0].req.state for t in topos])))
+        t_decided = self.clock.now()
         # 2. group members by plan (same-topo mode) or shape bucket
         groups: dict[tuple, list[_Entry]] = {}
         for e in batch:
@@ -576,11 +601,14 @@ class StreamingFrontend:
                         decision))
             t_done = self.clock.now()
             bsz = len(batch)
-            # service-time estimate feeding the admission controller
-            per_req = (t_done - t_admit) / bsz
-            self._est_service = per_req if self._est_service == 0.0 else \
-                (1 - self.service_ewma) * self._est_service \
-                + self.service_ewma * per_req
+            # service-time estimates feeding the admission controller:
+            # the batched decide is a per-CYCLE cost (amortized at decide
+            # time over the backlog — est_service()), the dispatch+fetch
+            # a per-REQUEST one
+            self._est_decide = self._ewma(self._est_decide,
+                                          t_decided - t_admit)
+            self._est_forward = self._ewma(self._est_forward,
+                                           (t_done - t_decided) / bsz)
             self.stats.admitted += bsz
             self.stats.served += bsz
             self.cycles.record(bsz, t_dispatch - t_admit)
@@ -655,7 +683,9 @@ class StreamingFrontend:
     def stats_dict(self) -> dict:
         return {**self.stats.as_dict(), "slo": self.slo_summary(),
                 "cycles": self.cycles.as_dict(),
-                "est_service": self._est_service,
+                "est_service": self.est_service(len(self.queue)),
+                "est_decide": self._est_decide,
+                "est_forward": self._est_forward,
                 "plan_cache": self.engine.plan_cache_info()._asdict()}
 
 

@@ -1,0 +1,70 @@
+"""``benchmarks.common`` staleness guard: old-schema BENCH files flagged.
+
+``warn_stale_benches`` used to check only the git stamp, so a BENCH file
+written by an older-schema writer (whose record fields current readers
+misinterpret) silently passed the smoke gates as long as the stamp
+matched. It now flags any ``schema`` that differs from
+``BENCH_SCHEMA_VERSION`` too.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import common  # noqa: E402
+
+
+def _git_repo_with_head(tmp_path) -> str:
+    """Init a throwaway repo with one commit; returns its short hash."""
+    def git(*args):
+        return subprocess.run(
+            ["git", "-c", "user.email=t@t", "-c", "user.name=t", *args],
+            cwd=tmp_path, capture_output=True, text=True, check=True
+        ).stdout.strip()
+    git("init", "-q")
+    (tmp_path / "code.py").write_text("pass\n")
+    git("add", "code.py")
+    git("commit", "-qm", "seed")
+    return git("log", "-1", "--format=%h")
+
+
+def test_warn_stale_benches_flags_old_schema(tmp_path, capsys):
+    here = _git_repo_with_head(tmp_path)
+    good = {"schema": common.BENCH_SCHEMA_VERSION, "git": here,
+            "records": []}
+    (tmp_path / "BENCH_good.json").write_text(json.dumps(good))
+    old = dict(good, schema=common.BENCH_SCHEMA_VERSION - 1)
+    (tmp_path / "BENCH_oldschema.json").write_text(json.dumps(old))
+    missing = {"git": here, "records": []}      # pre-schema writer
+    (tmp_path / "BENCH_noschema.json").write_text(json.dumps(missing))
+
+    stale = common.warn_stale_benches(tmp_path)
+    assert stale == ["BENCH_noschema.json", "BENCH_oldschema.json"]
+    out = capsys.readouterr().out
+    assert "schema" in out and "BENCH_good.json" not in out
+
+
+def test_warn_stale_benches_still_flags_stamps(tmp_path, capsys):
+    here = _git_repo_with_head(tmp_path)
+    cur = common.BENCH_SCHEMA_VERSION
+    cases = {
+        "BENCH_stale.json": {"schema": cur, "git": "0000000"},
+        "BENCH_dirty.json": {"schema": cur, "git": here + "-dirty"},
+        "BENCH_clean.json": {"schema": cur, "git": here},
+    }
+    for name, payload in cases.items():
+        (tmp_path / name).write_text(json.dumps(dict(payload, records=[])))
+    stale = common.warn_stale_benches(tmp_path)
+    assert sorted(stale) == ["BENCH_dirty.json", "BENCH_stale.json"]
+    assert "BENCH_clean.json" not in capsys.readouterr().out
+
+
+def test_checked_in_benches_carry_current_schema():
+    """The repo's own BENCH files must never lag the writer."""
+    root = Path(__file__).resolve().parent.parent
+    for path in sorted(root.glob("BENCH_*.json")):
+        payload = json.loads(path.read_text())
+        assert payload.get("schema") == common.BENCH_SCHEMA_VERSION, \
+            path.name

@@ -178,3 +178,62 @@ def test_cross_batched_forward_is_cached_on_member_keys():
     plans1, fwd1 = engine.cross_batched_forward(entries)
     plans2, fwd2 = engine.cross_batched_forward(entries)
     assert fwd1 is fwd2 and plans1 is plans2
+
+
+# -- adaptive bucket quantums -------------------------------------------------
+
+def test_bucket_family_quantum_widens_over_straddling_halos():
+    """A family whose halo widths straddle a PLAN_BUCKET_QUANTUM boundary
+    (e.g. 7 vs 9) doubles its quantum until both land in one bucket, so
+    the hot layout family batches together instead of splitting."""
+    from repro.serve.engine import BucketFamily, PlanEntry
+    rng = np.random.default_rng(7)
+    base = build_plans(rng, [22])[0]
+    lo = pad_plan(base, base.block, 7, base.max_degree)
+    hi = pad_plan(base, base.block, 9, base.max_degree)
+    assert plan_bucket(lo) != plan_bucket(hi)          # fixed quantum splits
+    engine, _, _ = make_engine()
+    e_lo = PlanEntry(("t", "lo"), lo, lambda *a: None)
+    e_hi = PlanEntry(("t", "hi"), hi, lambda *a: None)
+    b_lo = engine.entry_bucket(e_lo)
+    assert b_lo == plan_bucket(lo)                     # first sighting: q=8
+    b_hi = engine.entry_bucket(e_hi)                   # spread seen → widen
+    assert engine.entry_bucket(e_lo) == b_hi           # e_lo re-buckets
+    assert e_lo.bucket_quantum == e_hi.bucket_quantum == 16
+    # widening only merges: one more width inside the same 16-bucket
+    mid = pad_plan(base, base.block, 12, base.max_degree)
+    e_mid = PlanEntry(("t", "mid"), mid, lambda *a: None)
+    assert engine.entry_bucket(e_mid) == b_hi
+    # the family histogram is bounded and capped at the quantum ceiling
+    fam = BucketFamily()
+    for h in range(1, 200):
+        q = fam.observe(h)
+    from repro.serve.engine import PLAN_BUCKET_QUANTUM_CAP, _FAMILY_HIST_MAX
+    assert q == PLAN_BUCKET_QUANTUM_CAP
+    assert len(fam.hist) <= _FAMILY_HIST_MAX
+
+
+def test_adaptive_bucket_serves_cross_batch_after_widening():
+    """End to end: two plans split at quantum 8 still serve as ONE
+    cross-topology dispatch once their family widened — outputs stay
+    bitwise equal to the per-plan forwards."""
+    from repro.serve.engine import PlanEntry
+    rng = np.random.default_rng(8)
+    base = build_plans(rng, [20])[0]
+    variants = [pad_plan(base, base.block, 7, base.max_degree),
+                pad_plan(base, base.block, 9, base.max_degree)]
+    engine, _, _ = make_engine()
+    entries = [PlanEntry(("t", str(i)), p, lambda *a: None)
+               for i, p in enumerate(variants)]
+    for e in entries:
+        engine.entry_bucket(e)
+    assert len({engine.entry_bucket(e) for e in entries}) == 1
+    plans, fwd = engine.cross_batched_forward(entries)
+    xs = [rng.standard_normal((p.n, 8)).astype(np.float32)
+          for p in variants]
+    outs = gather_multi(plans, np.asarray(
+        fwd(scatter_multi(plans, xs), engine.params)))
+    for plan, x, out in zip(variants, xs, outs):
+        single = make_forward_fn(mesh1(), "servers", plan)
+        y = plan.gather(np.asarray(single(plan.scatter(x), engine.params)))
+        assert np.array_equal(out, y)

@@ -448,3 +448,66 @@ def test_run_drains_open_loop_poisson_workload():
     assert fe.stats.batches < 24                       # batching happened
     assert engine.plan_cache_info().misses == 2        # one per topology
     assert max(oracle_err(engine, r) for r in results) < 1e-4
+
+
+# -- amortized admission-time service estimate --------------------------------
+
+def test_est_service_amortizes_decide_over_backlog():
+    """The batched decide is a per-cycle cost: the admission-time estimate
+    spreads it over the batch the backlog supports (capped at max_batch)
+    and charges the per-request forward cost whole — a deep backlog must
+    never look *slower* per request than a shallow one."""
+    engine, state, rng = make_engine()
+    fe = StreamingFrontend(engine=engine, queue_depth=32, max_batch=8,
+                           clock=ManualClock(tick_per_now=0.01))
+    for _ in range(4):
+        fe.submit(req(state, rng))
+    fe.pump()
+    assert fe._est_decide > 0.0 and fe._est_forward > 0.0
+    # amortization: decide cost split max_batch ways at deep backlog
+    deep = fe.est_service(backlog=fe.max_batch)
+    shallow = fe.est_service(backlog=1)
+    assert deep == fe._est_decide / fe.max_batch + fe._est_forward
+    assert shallow == fe._est_decide + fe._est_forward
+    assert deep < shallow
+    # backlog beyond max_batch can't amortize further (one cycle's batch)
+    assert fe.est_service(backlog=100) == deep
+    assert fe.est_service(backlog=0) == shallow         # empty queue: 1
+    stats = fe.stats_dict()
+    assert stats["est_decide"] == fe._est_decide
+    assert stats["est_forward"] == fe._est_forward
+    assert stats["est_service"] == fe.est_service(len(fe.queue))
+
+
+def test_admission_sees_amortized_not_full_cycle_cost():
+    """The controller's ``decide`` receives the amortized estimate — the
+    decide cost split over the backlog's batch, not the full cycle cost
+    per request (the old, systematically pessimistic behaviour that shed
+    deadlines the batched cycle would comfortably meet)."""
+    class Recorder(AdmitAll):
+        def __init__(self):
+            self.seen = []
+
+        def decide(self, entry, now, backlog, est_service):
+            self.seen.append((backlog, est_service))
+            return super().decide(entry, now, backlog, est_service)
+
+    engine, state, rng = make_engine()
+    rec = Recorder()
+    fe = StreamingFrontend(engine=engine, queue_depth=32, max_batch=8,
+                           admission=rec,
+                           clock=ManualClock(tick_per_now=0.01))
+    for _ in range(8):
+        fe.submit(req(state, rng))
+    fe.pump()                                   # estimates now warm
+    rec.seen.clear()
+    d0, f0 = fe._est_decide, fe._est_forward    # pre-cycle EWMA state
+    assert d0 > 0.0 and f0 > 0.0
+    for _ in range(8):
+        fe.submit(req(state, rng))
+    fe.pump()
+    backlog, est = rec.seen[0]
+    assert backlog == 8
+    assert est == d0 / 8 + f0 < d0 + f0
+    # every candidate of the cycle saw the same (cycle-scoped) estimate
+    assert all(e == est for _, e in rec.seen)

@@ -1,0 +1,324 @@
+"""Multi-host SPMD serving (repro.gnn.multihost): sharded plan
+construction parity, pair-exchange layout invariants, plan-shard cache
+key agreement, and — in the slow lane — real multi-process gloo runs
+sweeping process counts {1, 2, 4} that must be **bitwise** equal to the
+single-process ``distributed_gcn_forward`` for every aggregate kernel,
+inactive-vertex and zero-halo edge cases included (DESIGN.md §8)."""
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import random_edges
+from repro.gnn.multihost import (PlanShard, ShardedPlanCache, agree_metadata,
+                                 make_partition_plan_shard, plan_shard_key,
+                                 process_device_range)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def graph(rng, n=60, e=150, devices=4, inactive_frac=0.1):
+    edges = random_edges(rng, n, e)
+    assign = rng.integers(0, devices, n)
+    assign[rng.random(n) < inactive_frac] = -1        # inactive vertices
+    return edges, assign.astype(np.int64)
+
+
+# -- sharded construction (fast, in-process) ----------------------------------
+
+def test_process_device_range_contiguous_split():
+    assert process_device_range(8, 0, 2) == (0, 4)
+    assert process_device_range(8, 1, 2) == (4, 8)
+    assert process_device_range(4, 3, 4) == (3, 4)
+    with pytest.raises(AssertionError):
+        process_device_range(6, 0, 4)                 # not divisible
+
+
+def test_agree_metadata_single_process_is_identity():
+    local = np.array([7, 3], np.int64)
+    assert np.array_equal(agree_metadata(local), local)
+
+
+@pytest.mark.parametrize("exchange", ["pair", "gather"])
+def test_plan_shard_single_process_matches_full_plan(rng, exchange):
+    """At one process the shard IS the plan: every array — including the
+    O(E·K) neighbor blocks — must be bitwise equal to
+    ``make_partition_plan_sparse``'s, and the degree pass must reproduce
+    the per-slot neighbor sums exactly (``np.add.at`` accumulates f32
+    in slot order)."""
+    from repro.gnn.distributed import make_partition_plan_sparse
+    edges, assign = graph(rng)
+    plan = make_partition_plan_sparse(edges, assign, 4, exchange=exchange)
+    shard = make_partition_plan_shard(edges, assign, 4, exchange=exchange,
+                                      process_id=0, num_processes=1)
+    assert (shard.dev0, shard.dev1) == (0, 4)
+    assert shard.exchange == exchange
+    back = shard.to_plan()
+    for name in ("perm", "send_idx", "send_mask", "nbr_idx", "nbr_val",
+                 "mask"):
+        assert np.array_equal(getattr(back, name), getattr(plan, name)), \
+            name
+    assert (back.block, back.halo, back.n) == (plan.block, plan.halo,
+                                               plan.n)
+    assert np.array_equal(shard.wdeg, plan.nbr_val.sum(2))
+
+
+def test_plan_shards_partition_the_neighbor_arrays(rng):
+    """Across processes, each shard holds exactly its own device slab of
+    the full plan's neighbor arrays — same K, same layout metadata."""
+    from repro.gnn.distributed import make_partition_plan_sparse
+    edges, assign = graph(rng)
+    plan = make_partition_plan_sparse(edges, assign, 4, exchange="pair")
+    for nproc in (2, 4):
+        for pid in range(nproc):
+            s = make_partition_plan_shard(edges, assign, 4,
+                                          exchange="pair", process_id=pid,
+                                          num_processes=nproc)
+            assert (s.dev0, s.dev1) == process_device_range(4, pid, nproc)
+            # simulated shards can't allgather K (agree_metadata is an
+            # identity off-grid), so compare the valid slot prefix: the
+            # slab's real neighbors match and the plan's extra padded
+            # slots are inert
+            assert s.k <= plan.max_degree
+            slab_val = plan.nbr_val[s.dev0:s.dev1]
+            assert np.array_equal(s.nbr_val, slab_val[:, :, :s.k])
+            assert not slab_val[:, :, s.k:].any()
+            real = s.nbr_val > 0
+            assert np.array_equal(s.nbr_idx[real],
+                                  plan.nbr_idx[s.dev0:s.dev1, :, :s.k][real])
+            assert np.array_equal(s.perm, plan.perm)
+            assert np.array_equal(s.send_idx, plan.send_idx)
+
+
+def test_pair_exchange_halo_is_cut_edges_only(rng):
+    """The pair layout's wire bytes cover exactly the cut: every occupied
+    [q, p] send slot is a row of device q read by a cross edge into p,
+    rows are unique per (q, p), and the bytes model is strictly below the
+    replicate-everything baseline."""
+    edges, assign = graph(rng, inactive_frac=0.0)
+    shard = make_partition_plan_shard(edges, assign, 4, exchange="pair",
+                                      process_id=0, num_processes=1)
+    i, j = edges.T
+    cross = assign[i] != assign[j]
+    cut_pairs = set()
+    for a, b in edges[cross]:
+        cut_pairs.add((assign[a], assign[b], b))      # q=owner of dst slot
+        cut_pairs.add((assign[b], assign[a], a))
+    occupied = int(shard.send_mask.sum())
+    assert occupied == len({(q, p, v) for q, p, v in cut_pairs})
+    for q in range(4):
+        for p in range(4):
+            slots = shard.send_idx[q, p][shard.send_mask[q, p] > 0]
+            assert len(np.unique(slots)) == len(slots)
+    assert shard.bytes_per_aggregate(16) \
+        < shard.replicate_bytes_per_aggregate(16)
+
+
+def test_zero_halo_graph_builds_and_serves(rng):
+    """No cross edges at all: halo collapses to the 1-slot minimum, every
+    send mask is zero, and the sharded forward still matches the
+    reference bitwise (the all_to_all moves only zero rows)."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.gnn.distributed import distributed_gcn_forward, \
+        make_partition_plan_sparse
+    from repro.gnn.layers import gcn_init
+    from repro.gnn.multihost import fetch_global, put_feature_blocks, \
+        sharded_forward_fn
+    n = 24
+    edges = random_edges(rng, n, 60)
+    assign = np.zeros(n, np.int64)                    # all on one device
+    shard = make_partition_plan_shard(edges, assign, 1, exchange="pair",
+                                      process_id=0, num_processes=1)
+    assert shard.halo == 1 and shard.send_mask.sum() == 0
+    mesh = Mesh(np.array(jax.devices()[:1]), ("servers",))
+    params = gcn_init(jax.random.PRNGKey(0), [8, 6, 4])
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    plan = make_partition_plan_sparse(edges, assign, 1, exchange="pair")
+    ref = distributed_gcn_forward(mesh, "servers", plan, params, x)
+    fwd, _ = sharded_forward_fn(mesh, "servers", shard)
+    out = fwd(put_feature_blocks(mesh, "servers", shard, x), params)
+    assert np.array_equal(shard.gather(fetch_global(out)), ref)
+
+
+@pytest.mark.parametrize("agg", ["dense", "sparse", "fused"])
+def test_sharded_forward_matches_distributed_inprocess(rng, agg):
+    """Single-process resident path vs ``distributed_gcn_forward`` on the
+    full plan: bitwise, for every aggregate, with inactive vertices."""
+    import jax
+    from jax.sharding import Mesh
+    from repro.gnn.distributed import distributed_gcn_forward, \
+        make_partition_plan_sparse
+    from repro.gnn.layers import gcn_init
+    edges, assign = graph(rng, devices=1)
+    from repro.gnn.multihost import fetch_global, put_feature_blocks, \
+        sharded_forward_fn
+    mesh = Mesh(np.array(jax.devices()[:1]), ("servers",))
+    params = gcn_init(jax.random.PRNGKey(1), [8, 6, 4])
+    x = rng.standard_normal((len(assign), 8)).astype(np.float32)
+    plan = make_partition_plan_sparse(edges, assign, 1, exchange="pair")
+    ref = distributed_gcn_forward(mesh, "servers", plan, params, x,
+                                  aggregate=agg)
+    shard = make_partition_plan_shard(edges, assign, 1, exchange="pair",
+                                      process_id=0, num_processes=1)
+    fwd, resolved = sharded_forward_fn(mesh, "servers", shard, aggregate=agg)
+    assert resolved == agg
+    out = fwd(put_feature_blocks(mesh, "servers", shard, x), params)
+    assert np.array_equal(shard.gather(fetch_global(out)), ref)
+
+
+def test_plan_shard_key_lockstep_and_sensitivity(rng):
+    """The cache key is a pure function of (edges, assign, P, exchange) —
+    identical across processes by construction — and changes when any of
+    them does."""
+    edges, assign = graph(rng)
+    k = plan_shard_key(edges, assign, 4, "pair")
+    assert k == plan_shard_key(edges.copy(), assign.copy(), 4, "pair")
+    assert k != plan_shard_key(edges, assign, 2, "pair")
+    assert k != plan_shard_key(edges, assign, 4, "gather")
+    other = assign.copy()
+    other[0] = (other[0] + 1) % 4
+    assert k != plan_shard_key(edges, other, 4, "pair")
+
+
+def test_sharded_plan_cache_hits_on_same_topology(rng):
+    import jax
+    from jax.sharding import Mesh
+    edges, assign = graph(rng, devices=1)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("servers",))
+    cache = ShardedPlanCache(mesh, "servers")
+    k1, shard, fwd, hit1 = cache.entry(edges, assign, 1)
+    assert not hit1 and isinstance(shard, PlanShard)
+    k2, shard2, fwd2, hit2 = cache.entry(edges, assign, 1)
+    assert hit2 and k2 == k1 and shard2 is shard and fwd2 is fwd
+
+
+# -- multi-process parity sweep (slow lane) -----------------------------------
+
+_WORKER = textwrap.dedent("""
+    import os, sys
+    nproc, pid, port, outdir = (int(sys.argv[1]), int(sys.argv[2]),
+                                sys.argv[3], sys.argv[4])
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=%d" % (4 // nproc))
+    import jax
+    if nproc > 1:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        jax.distributed.initialize("127.0.0.1:" + port, nproc, pid)
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.gnn.layers import gcn_init
+    from repro.gnn.multihost import (fetch_global, make_partition_plan_shard,
+                                     put_feature_blocks, sharded_forward_fn)
+    rng = np.random.default_rng(5)
+    n = 80
+    edges = np.load(outdir + "/edges.npy")
+    assign = np.load(outdir + "/assign.npy")
+    x = np.load(outdir + "/x.npy")
+    params = gcn_init(jax.random.PRNGKey(3), [16, 8, 5])
+    mesh = Mesh(np.array(jax.devices()), ("servers",))
+    shard = make_partition_plan_shard(edges, assign, 4, exchange="pair")
+    xb = put_feature_blocks(mesh, "servers", shard, x)
+    flags = {}
+    for agg in ("dense", "sparse", "fused"):
+        fwd, _ = sharded_forward_fn(mesh, "servers", shard, aggregate=agg)
+        out = shard.gather(fetch_global(fwd(xb, params)))
+        ref = np.load(outdir + "/ref_" + agg + ".npy")
+        flags[agg] = int(np.array_equal(out, ref))
+    if pid == 0:
+        print("BITWISE", flags)
+""")
+
+_REF = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    from jax.sharding import Mesh
+    from repro.gnn.distributed import (distributed_gcn_forward,
+                                       make_partition_plan_sparse)
+    from repro.gnn.layers import gcn_init
+    outdir = sys.argv[1]
+    edges = np.load(outdir + "/edges.npy")
+    assign = np.load(outdir + "/assign.npy")
+    x = np.load(outdir + "/x.npy")
+    params = gcn_init(jax.random.PRNGKey(3), [16, 8, 5])
+    mesh = Mesh(np.array(jax.devices()), ("servers",))
+    plan = make_partition_plan_sparse(edges, assign, 4, exchange="pair")
+    for agg in ("dense", "sparse", "fused"):
+        ref = distributed_gcn_forward(mesh, "servers", plan, params, x,
+                                      aggregate=agg)
+        np.save(outdir + "/ref_" + agg + ".npy", np.asarray(ref))
+    print("REF OK")
+""")
+
+
+def _free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return str(s.getsockname()[1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("nproc", [1, 2, 4])
+def test_multihost_bitwise_parity_subprocess(nproc, tmp_path):
+    """The full sweep the issue demands: {1, 2, 4} simulated processes
+    over a 4-device mesh (1×4, 2×2, 4×1), sharded plan + resident
+    features + halo-only exchange, bitwise equal to the single-process
+    ``distributed_gcn_forward`` for dense/sparse/fused — on a graph with
+    inactive vertices and an uneven cut."""
+    rng = np.random.default_rng(5)
+    edges, assign = graph(rng, n=80, e=240)
+    x = rng.standard_normal((80, 16)).astype(np.float32)
+    np.save(tmp_path / "edges.npy", edges)
+    np.save(tmp_path / "assign.npy", assign)
+    np.save(tmp_path / "x.npy", x)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    ref = subprocess.run([sys.executable, "-c", _REF, str(tmp_path)],
+                         capture_output=True, text=True, timeout=420,
+                         env=env)
+    assert ref.returncode == 0, ref.stderr[-4000:]
+    port = _free_port()
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _WORKER, str(nproc), str(pid), port,
+         str(tmp_path)],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env=env) for pid in range(nproc)]
+    outs = [p.communicate(timeout=420)[0] for p in procs]
+    for p, out in zip(procs, outs):
+        assert p.returncode == 0, out[-4000:]
+    assert "BITWISE {'dense': 1, 'sparse': 1, 'fused': 1}" in outs[0], \
+        outs[0][-2000:]
+
+
+@pytest.mark.slow
+def test_serve_multihost_launcher_parity_and_halo_gate(tmp_path):
+    """The CLI end to end at 2 simulated hosts: bitwise parity against
+    its own 1-host reference and halo bytes strictly below the
+    replicate-everything baseline."""
+    import json
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    ref = str(tmp_path / "ref.npy")
+    base = [sys.executable, "-m", "repro.launch.serve_multihost",
+            "--quick", "--devices", "4", "--steps", "2",
+            "--vertices", "4000", "--edges", "12000"]
+    one = subprocess.run(
+        base + ["--processes", "1", "--ref-out", ref,
+                "--json-out", str(tmp_path / "one.json")],
+        capture_output=True, text=True, timeout=420, env=env)
+    assert one.returncode == 0, one.stdout + one.stderr
+    two = subprocess.run(
+        base + ["--processes", "2", "--ref-in", ref,
+                "--json-out", str(tmp_path / "two.json")],
+        capture_output=True, text=True, timeout=420, env=env)
+    assert two.returncode == 0, two.stdout + two.stderr
+    rec = json.loads((tmp_path / "two.json").read_text())
+    assert rec["parity_max_err"] == 0.0
+    assert rec["halo_bytes_per_step"] < rec["replicate_bytes_per_step"]

@@ -259,3 +259,24 @@ def test_engine_multidevice_subprocess():
                          text=True, timeout=420, env=env)
     assert out.returncode == 0, out.stderr[-4000:]
     assert float(out.stdout.split("ERR")[1]) < 1e-4
+
+
+# -- pair exchange through the engine -----------------------------------------
+
+def test_engine_pair_exchange_matches_gather_bitwise():
+    """The engine's ``exchange="pair"`` knob (the multi-host halo-only
+    wire) serves bitwise-identically to the default gather layout — the
+    two layouts move the same rows, just over different collectives."""
+    reqs = None
+    outs = {}
+    for exchange in ("gather", "pair"):
+        engine, state, rng = make_engine(exchange=exchange)
+        if reqs is None:
+            reqs = requests_for(rng, state, steps=2, repeats=2,
+                                change_rate=0.3)
+        results = engine.serve_all(reqs)
+        assert all(r.plan.exchange == exchange for r in results)
+        assert max(oracle_err(engine, r) for r in results) < 1e-4
+        outs[exchange] = [r.output for r in results]
+    for a, b in zip(outs["gather"], outs["pair"]):
+        assert np.array_equal(a, b)
