@@ -47,6 +47,23 @@ The file also carries the **streaming front-end records** (``"mode":
   sustained req/s, the speedup over the PR 6 ``burst_batchable`` record
   (``pr6_burst_rps_ref``), and the **exact** (bitwise, ``== 0``) parity
   vs the sequential no-frontend engine oracle, which CI gates.
+
+And the **fault-injection records** (``"mode": "failure"`` — DESIGN.md §9,
+the chaos harness of ``repro.serve.faults``):
+
+* ``server_down_migration`` — a mid-stream server failure + recovery on a
+  deterministic (ManualClock) streaming run: every queued request migrates
+  to a warm-recut plan on the repriced network. CI gates
+  ``lost_requests == 0``, conservation, ``requests_migrated > 0``,
+  recovery within 3 pump cycles, a bitwise-identical fault trace across
+  two identical runs (``trace_deterministic``), and output parity against
+  the single-device oracle (the GCN output depends only on the topology,
+  so migration must never change it).
+* ``warm_recut`` — the migration re-cut itself: warm-started multilevel
+  refinement (previous cut as the initial assignment, coarsening and GGGP
+  skipped) vs a from-scratch re-partition on the post-fault server count,
+  comparing wall time (``recut_speedup``), edge cut, and the system cost
+  of the resulting offload decision (``cost_delta_vs_scratch``).
 """
 from __future__ import annotations
 
@@ -346,6 +363,146 @@ def _streaming_records(quick, mesh, devices) -> list:
     return records
 
 
+def _failure_records(quick, mesh, devices) -> list:
+    """The fault-injection arms (``"mode": "failure"`` records).
+
+    ``server_down_migration`` runs the exact fault drill CI gates: a
+    mid-stream ``server_down`` + ``server_up`` on a ManualClock streaming
+    run, executed **twice** with identical seeds so the fault trace, the
+    stats ledger and every served output can be checked for bitwise
+    determinism. ``warm_recut`` isolates the migration re-cut cost."""
+    import time as _time
+    import types
+
+    import jax
+
+    from repro.core import costs
+    from repro.core.api import GraphEdgeController, state_edges
+    from repro.core.dynamic_graph import random_scenario
+    from repro.core.multilevel import multilevel_partition
+    from repro.gnn.layers import gcn_init
+    from repro.serve import (AdmitAll, FaultInjector, FaultSchedule,
+                             ManualClock, ServingEngine, StreamRequest,
+                             StreamingFrontend, poisson_workload)
+
+    users = 64 if quick else 128
+    capacity = users + 8
+    count = 24 if quick else 48
+    spec = "2:server_down:1,5:server_up:1"
+    rng = np.random.default_rng(5)
+    net = costs.default_network(rng, capacity, 4)
+    params = gcn_init(jax.random.PRNGKey(5), [FEATURES, HIDDEN, CLASSES])
+    state = random_scenario(rng, capacity, users, 3 * users)
+    xs = [rng.normal(size=(capacity, FEATURES)).astype(np.float32)
+          for _ in range(count)]
+
+    # -- server_down_migration: the gated fault drill, twice -----------------
+    def fault_pass():
+        eng = ServingEngine(
+            controller=GraphEdgeController(net=net, policy="greedy_jit"),
+            params=params, mesh=mesh, num_devices=devices)
+        inj = FaultInjector(FaultSchedule.parse(spec), net, seed=0)
+        fe = StreamingFrontend(engine=eng, queue_depth=count, max_batch=4,
+                               admission=AdmitAll(), faults=inj,
+                               clock=ManualClock(tick_per_now=0.02))
+        wl = poisson_workload(
+            np.random.default_rng(4), rate=5.0, count=count,
+            make_request=lambda i: StreamRequest(state=state, x=xs[i]))
+        t0 = _time.perf_counter()
+        results = fe.run(wl)
+        return fe, results, _time.perf_counter() - t0
+
+    fe_a, res_a, _ = fault_pass()          # also warms the compiles
+    fe_b, res_b, t_run = fault_pass()
+    out_a = {r.rid: r.output for r in res_a}
+    out_b = {r.rid: r.output for r in res_b}
+    trace_det = bool(
+        fe_a.fault_trace == fe_b.fault_trace
+        and fe_a.stats.as_dict() == fe_b.stats.as_dict()
+        and out_a.keys() == out_b.keys()
+        and all(np.array_equal(out_a[rid], out_b[rid]) for rid in out_a))
+    parity = max(
+        _oracle_err(params, r.output,
+                    types.SimpleNamespace(state=state, x=xs[r.rid]))
+        for r in res_b)
+    stats = fe_b.stats.as_dict()
+    lost = stats["submitted"] - stats["served"] - stats["rejected_total"]
+    recovery = max((t["recovery_cycles"] for t in fe_b.fault_trace
+                    if "recovery_cycles" in t), default=0)
+    rec = {
+        "mode": "failure", "workload": "server_down_migration",
+        "users": users, "capacity": capacity, "devices": devices,
+        "requests": count, "faults": spec, "clock": "manual",
+        "max_batch": 4,
+        "submitted": stats["submitted"], "served": stats["served"],
+        "lost_requests": int(lost),
+        "requests_migrated": stats["requests_migrated"],
+        "migrated_served": stats["migrated_served"],
+        "recovery_cycles": int(recovery),
+        "net_swaps": fe_b.engine.net_swaps,
+        "fault_events": sum(len(t["events"]) for t in fe_b.fault_trace),
+        "conservation_ok": bool(stats["conservation_ok"]),
+        "trace_deterministic": trace_det,
+        "parity_vs_oracle_max_err": parity,
+    }
+    records = [rec]
+    emit(f"failure_server_down_migration_u{users}", t_run / count * 1e6,
+         f"migrated={rec['requests_migrated']};lost={rec['lost_requests']};"
+         f"recovery_cycles={rec['recovery_cycles']};"
+         f"deterministic={trace_det};max_err={parity:.1e}")
+
+    # -- warm_recut: warm-started migration re-cut vs from-scratch -----------
+    edges = state_edges(state)
+    active = np.asarray(state.mask) > 0
+    n = state.capacity
+    cold = multilevel_partition(n, edges, 4, active=active)
+    reps = 3 if quick else 5
+    warm = scratch = None
+    multilevel_partition(n, edges, 3, active=active, initial=cold)
+    t0 = _time.perf_counter()
+    for _ in range(reps):
+        warm = multilevel_partition(n, edges, 3, active=active, initial=cold)
+    t_warm = (_time.perf_counter() - t0) / reps
+    multilevel_partition(n, edges, 3, active=active)
+    t0 = _time.perf_counter()
+    for _ in range(reps):
+        scratch = multilevel_partition(n, edges, 3, active=active)
+    t_scratch = (_time.perf_counter() - t0) / reps
+
+    def cut(assign):
+        a, b = assign[edges[:, 0]], assign[edges[:, 1]]
+        return int(np.sum((a >= 0) & (b >= 0) & (a != b)))
+
+    # system cost of the offload decision each cut leads to on the
+    # post-fault (server 1 down) pricing
+    m = int(net.f_k.shape[0])
+    prof = costs.ServerProfile.healthy(m)
+    deg = costs.degrade_network(net, prof._replace(up=prof.up.at[1].set(0.0)))
+    ctrl_warm = GraphEdgeController(net=deg, policy="greedy_jit")
+    ctrl_warm.recut_warm(state, cold, num_parts=3)
+    c_warm = float(ctrl_warm.step(state).cost.c)
+    ctrl_scratch = GraphEdgeController(net=deg, policy="greedy_jit",
+                                       partitioner="multilevel",
+                                       partitioner_kwargs={"num_parts": 3})
+    c_scratch = float(ctrl_scratch.step(state).cost.c)
+    rec = {
+        "mode": "failure", "workload": "warm_recut",
+        "users": users, "capacity": capacity,
+        "parts_before": 4, "parts_after": 3,
+        "t_warm_ms": t_warm * 1e3, "t_scratch_ms": t_scratch * 1e3,
+        "recut_speedup": t_scratch / t_warm,
+        "cut_warm": cut(warm), "cut_scratch": cut(scratch),
+        "cost_warm": c_warm, "cost_scratch": c_scratch,
+        "cost_delta_vs_scratch": (c_warm - c_scratch) / c_scratch,
+    }
+    records.append(rec)
+    emit(f"failure_warm_recut_u{users}", t_warm * 1e6,
+         f"recut_speedup={rec['recut_speedup']:.2f}x;"
+         f"cut_warm={rec['cut_warm']};cut_scratch={rec['cut_scratch']};"
+         f"cost_delta={rec['cost_delta_vs_scratch']:+.4f}")
+    return records
+
+
 def _multihost_records(quick) -> list:
     """The multi-host SPMD arms (``"mode": "multihost"`` records).
 
@@ -503,6 +660,7 @@ def _run(quick: bool) -> None:
              f"max_err={eng_err:.1e}")
 
     records.extend(_streaming_records(quick, mesh, devices))
+    records.extend(_failure_records(quick, mesh, devices))
     records.extend(_multihost_records(quick))
     write_bench_json(OUT_JSON, "serving", quick, records)
 

@@ -609,6 +609,12 @@ class LruCache:
     def __len__(self) -> int:
         return len(self._data)
 
+    def clear(self) -> None:
+        """Drop every entry (counters survive — they describe lookups,
+        not contents). Used when cached values are invalidated wholesale,
+        e.g. a fault event changes the effective server set."""
+        self._data.clear()
+
     def info(self) -> CacheInfo:
         return CacheInfo(self.hits, self.misses, self.maxsize,
                          len(self._data))
@@ -683,6 +689,40 @@ class GraphEdgeController:
     def cache_info(self) -> CacheInfo:
         """Partition-cache counters (``functools.lru_cache`` convention)."""
         return self._partition_cache.info()
+
+    def invalidate_partitions(self) -> None:
+        """Flush the topology-keyed partition cache. Call when cached cuts
+        stop being the ones you want for their topology — e.g. a fault
+        event changed the live server count so re-cuts should target a
+        different number of parts (DESIGN.md §9)."""
+        self._partition_cache.clear()
+
+    def recut_warm(self, state: GraphState, previous: np.ndarray,
+                   num_parts: int | None = None, sweeps: int = 4,
+                   imbalance: float = 1.1) -> Partition:
+        """Warm-started multilevel re-cut seeded from ``previous`` (the
+        last decision's subgraph ids for this topology) — the migration
+        path after a fault event (DESIGN.md §9). Skips coarsening and the
+        initial cut entirely: the previous assignment is projected onto
+        ``num_parts`` parts (default: the number of distinct previous
+        parts) and boundary-refined, so the re-cut costs one
+        :func:`~repro.core.multilevel.refine` pass instead of a full
+        pipeline. The result is installed in the partition cache under the
+        state's topology key, so subsequent :meth:`step` calls on the same
+        topology reuse it."""
+        from repro.core.multilevel import multilevel_partition
+        prev = np.asarray(previous, np.int64)
+        if num_parts is None:
+            live = np.unique(prev[prev >= 0])
+            num_parts = max(1, len(live))
+        assigned = multilevel_partition(
+            state.capacity, state_edges(state), int(num_parts),
+            active=np.asarray(state.mask) > 0, sweeps=sweeps,
+            imbalance=imbalance, initial=prev)
+        part = _finish(state, assigned, "multilevel_warm")
+        if self.cache_partitions:
+            self._partition_cache.put(topology_key(state), part)
+        return part
 
     @property
     def cache_hits(self) -> int:

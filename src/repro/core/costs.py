@@ -33,8 +33,8 @@ class EdgeNetwork(NamedTuple):
     sigma2: float             # W           — noise power σ²
     rho0: float               # channel gain at d0 = 1 m
     h0: float                 # server↔server channel gain
-    zeta_im: float            # J/bit — unit upload energy ς_{i,m}
-    zeta_kl: float            # J/bit — unit server-transfer energy ς_{k,l}
+    zeta_im: float            # J/bit — unit upload energy ς_{i,m} (scalar or [M])
+    zeta_kl: float            # J/bit — unit server-transfer energy ς_{k,l} (scalar or [M, M])
 
 
 class GNNCostParams(NamedTuple):
@@ -201,6 +201,53 @@ def system_cost(net: EdgeNetwork, state: GraphState, w: jnp.ndarray,
     c = lambda_t * t_all + lambda_e * i_all
     return SystemCost(c, t_all, i_all, t_up, t_tran, t_com, i_up, i_com,
                       i_gnn, x_sym)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous per-server profiles (fault injection / degradation)
+# ---------------------------------------------------------------------------
+
+class ServerProfile(NamedTuple):
+    """Per-server health and heterogeneity scales (DESIGN.md §9).
+
+    A degraded server *reprices* rather than vanishing: its capacity and
+    compute shrink and its energy cost grows, so the offload policies route
+    around it through the ordinary cost terms. A down server (``up == 0``)
+    is unreachable: capacity 0, no uplink bandwidth, η row/col zeroed."""
+    up: jnp.ndarray              # [M] {0,1} — server reachable
+    compute_scale: jnp.ndarray   # [M] — multiplies f_k
+    capacity_scale: jnp.ndarray  # [M] — multiplies capacity
+    energy_scale: jnp.ndarray    # [M] — multiplies ς_{i,m} / ς_{k,l} (sender side)
+
+    @classmethod
+    def healthy(cls, m: int) -> "ServerProfile":
+        one = jnp.ones((m,), jnp.float32)
+        return cls(up=one, compute_scale=one, capacity_scale=one,
+                   energy_scale=one)
+
+
+def degrade_network(net: EdgeNetwork, profile: ServerProfile) -> EdgeNetwork:
+    """Reprice ``net`` under ``profile`` (pure; the base net is untouched).
+
+    capacity → capacity·capacity_scale·up (a down server hosts no one),
+    f_k → f_k·compute_scale (floored at 1 Hz so Eq. 9 stays finite),
+    B_im → B_im·up (no uplink to a down server), η_kl → η_kl·up_k·up_l,
+    ς_{i,m} → [M] per-server array scaled by energy_scale, and
+    ς_{k,l} → [M, M] sender-scaled by energy_scale."""
+    m = int(net.f_k.shape[0])
+    up = jnp.asarray(profile.up, jnp.float32)
+    zeta_im = (jnp.broadcast_to(jnp.asarray(net.zeta_im, jnp.float32), (m,))
+               * profile.energy_scale)
+    zeta_kl = (jnp.broadcast_to(jnp.asarray(net.zeta_kl, jnp.float32), (m, m))
+               * profile.energy_scale[:, None])
+    return net._replace(
+        f_k=jnp.maximum(net.f_k * profile.compute_scale, 1.0),
+        capacity=net.capacity * profile.capacity_scale * up,
+        B_im=net.B_im * up[None, :],
+        eta_kl=net.eta_kl * up[:, None] * up[None, :],
+        zeta_im=zeta_im,
+        zeta_kl=zeta_kl,
+    )
 
 
 def assignment_onehot(assign: jnp.ndarray, m: int) -> jnp.ndarray:

@@ -131,6 +131,30 @@ def random_scenario(rng: np.random.Generator, capacity: int, n_users: int,
     return make_graph_state(capacity, pos, edges, kb, active=n_users)
 
 
+def _attach_new_users(rng: np.random.Generator, state: GraphState,
+                      grow: np.ndarray, plane: float = 2000.0,
+                      friends: int = 3,
+                      task_kb_range=(500.0, 1500.0)) -> GraphState:
+    """Activate the slots marked in ``grow`` [N] {0,1}: uniform positions,
+    task sizes from ``task_kb_range``, and ≤``friends`` random associations
+    to already-active (or co-arriving) users. Shared by
+    :func:`perturb_scenario` and :func:`arrival_wave`."""
+    n = state.capacity
+    pos = rng.uniform(0, plane, (n, 2)).astype(np.float32)
+    kb = rng.uniform(*task_kb_range, n).astype(np.float32)
+    adj = np.asarray(state.adj).copy()
+    active = np.asarray(state.mask) + grow
+    for i in np.nonzero(grow)[0]:
+        cand = np.nonzero(active)[0]
+        cand = cand[cand != i]
+        if len(cand):
+            pick = rng.choice(cand, size=min(friends, len(cand)),
+                              replace=False)
+            adj[i, pick] = adj[pick, i] = 1.0
+    return add_users(state, jnp.asarray(grow), jnp.asarray(pos),
+                     jnp.asarray(kb), jnp.asarray(adj))
+
+
 def perturb_scenario(rng: np.random.Generator, state: GraphState,
                      change_rate: float = 0.2,
                      plane: float = 2000.0) -> GraphState:
@@ -148,19 +172,7 @@ def perturb_scenario(rng: np.random.Generator, state: GraphState,
     state = remove_users(state, jnp.asarray(drop))
     grow = (flips & (mask == 0)).astype(np.float32)
     if grow.any():
-        pos = rng.uniform(0, plane, (n, 2)).astype(np.float32)
-        kb = rng.uniform(500, 1500, n).astype(np.float32)
-        adj = np.asarray(state.adj).copy()
-        active = np.asarray(state.mask) + grow
-        for i in np.nonzero(grow)[0]:
-            cand = np.nonzero(active)[0]
-            cand = cand[cand != i]
-            if len(cand):
-                friends = rng.choice(cand, size=min(3, len(cand)),
-                                     replace=False)
-                adj[i, friends] = adj[friends, i] = 1.0
-        state = add_users(state, jnp.asarray(grow), jnp.asarray(pos),
-                          jnp.asarray(kb), jnp.asarray(adj))
+        state = _attach_new_users(rng, state, grow, plane=plane)
     # associations: rewire ~change_rate of edges among active users
     adj = np.asarray(state.adj).copy()
     mask = np.asarray(state.mask)
@@ -173,3 +185,70 @@ def perturb_scenario(rng: np.random.Generator, state: GraphState,
                 a, b = rng.choice(act, 2, replace=False)
                 adj[a, b] = adj[b, a] = 1.0
     return rewire(state, jnp.asarray(adj.astype(np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# event stream (user churn waves + server health; drives fault injection)
+# ---------------------------------------------------------------------------
+
+EVENT_ARRIVE = "arrive"
+EVENT_DEPART = "depart"
+EVENT_SERVER_DOWN = "server_down"
+EVENT_SERVER_UP = "server_up"
+EVENT_DEGRADE = "degrade"
+USER_EVENTS = (EVENT_ARRIVE, EVENT_DEPART)
+SERVER_EVENTS = (EVENT_SERVER_DOWN, EVENT_SERVER_UP, EVENT_DEGRADE)
+EVENT_KINDS = USER_EVENTS + SERVER_EVENTS
+
+
+class GraphEvent(NamedTuple):
+    """One timed event in a fault/churn schedule (DESIGN.md §9).
+
+    ``cycle`` is a logical clock tick (a frontend pump cycle or an engine
+    request index). User events carry ``count`` (wave size); server events
+    carry ``server`` (id) and, for ``degrade``, ``scale`` — the factor
+    applied to the server's capacity/compute (energy is scaled by 1/scale,
+    see ``repro.serve.faults``)."""
+    cycle: int
+    kind: str
+    count: int = 0
+    server: int = -1
+    scale: float = 1.0
+
+
+def arrival_wave(rng: np.random.Generator, state: GraphState, count: int,
+                 plane: float = 2000.0, friends: int = 3,
+                 task_kb_range=(500.0, 1500.0)) -> GraphState:
+    """Activate up to ``count`` inactive slots as newly-arrived users
+    (uniform positions, ≤``friends`` random associations each)."""
+    mask = np.asarray(state.mask)
+    free = np.nonzero(mask == 0)[0]
+    if len(free) == 0 or count <= 0:
+        return state
+    pick = rng.choice(free, size=min(count, len(free)), replace=False)
+    grow = np.zeros(state.capacity, np.float32)
+    grow[pick] = 1.0
+    return _attach_new_users(rng, state, grow, plane=plane, friends=friends,
+                             task_kb_range=task_kb_range)
+
+
+def departure_wave(rng: np.random.Generator, state: GraphState,
+                   count: int) -> GraphState:
+    """Deactivate up to ``count`` random active users (edges dropped)."""
+    act = np.nonzero(np.asarray(state.mask) > 0)[0]
+    if len(act) == 0 or count <= 0:
+        return state
+    pick = rng.choice(act, size=min(count, len(act)), replace=False)
+    drop = np.zeros(state.capacity, np.float32)
+    drop[pick] = 1.0
+    return remove_users(state, jnp.asarray(drop))
+
+
+def apply_user_event(rng: np.random.Generator, state: GraphState,
+                     event: GraphEvent) -> GraphState:
+    """Apply one user-churn event; server events pass through unchanged."""
+    if event.kind == EVENT_ARRIVE:
+        return arrival_wave(rng, state, event.count)
+    if event.kind == EVENT_DEPART:
+        return departure_wave(rng, state, event.count)
+    return state

@@ -280,7 +280,8 @@ def multilevel_partition(n: int, edges: np.ndarray, num_parts: int,
                          active: np.ndarray | None = None,
                          coarsen_to: int | None = None, sweeps: int = 4,
                          imbalance: float = 1.1, restarts: int = 4,
-                         seed: int = 0) -> np.ndarray:
+                         seed: int = 0,
+                         initial: np.ndarray | None = None) -> np.ndarray:
     """Coarsen → initial cut → refine. Returns [n] part ids (−1 inactive).
 
     ``restarts`` independent graph-growing initial cuts are refined on the
@@ -288,7 +289,15 @@ def multilevel_partition(n: int, edges: np.ndarray, num_parts: int,
     is small, so restarts are nearly free). The capacity constraint is
     ``cap = ceil(#active / k · imbalance)`` vertices per part — always
     feasible (``k · cap ≥ #active``), and the returned assignment respects
-    it at the finest level."""
+    it at the finest level.
+
+    ``initial`` enables a **warm start** (the fault-migration path,
+    DESIGN.md §9): a previous [n] assignment is taken as the starting cut
+    — coarsening and graph growing are skipped entirely, vertices with
+    ids outside [0, k) (newly-arrived users, parts of a now-down server)
+    are filled into the least-loaded parts, and ``refine`` runs directly
+    on the finest level (its leading rebalance pass restores the capacity
+    constraint)."""
     active = np.ones(n, bool) if active is None else np.asarray(active, bool)
     ids = np.nonzero(active)[0]
     na = len(ids)
@@ -311,6 +320,18 @@ def multilevel_partition(n: int, edges: np.ndarray, num_parts: int,
     w = (np.ones(len(e), np.float64) if weights is None
          else np.asarray(weights, np.float64)[keep])
     vwgt = np.ones(na, np.float64)
+
+    if initial is not None:
+        # warm start: refine the previous cut on the finest active subgraph
+        prev = np.asarray(initial, np.int64)[ids].copy()
+        prev[(prev < 0) | (prev >= k)] = -1
+        load = np.bincount(prev[prev >= 0], minlength=k).astype(np.float64)
+        for v in np.nonzero(prev < 0)[0]:
+            p = int(np.argmin(load))
+            prev[v] = p
+            load[p] += vwgt[v]
+        out[ids] = refine(na, e, w, vwgt, prev, k, cap, sweeps=sweeps)
+        return out
 
     # coarsen until the graph is small or matching stalls
     levels: list[tuple] = []       # (cmap, finer (n, e, w, vwgt))

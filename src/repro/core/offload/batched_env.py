@@ -61,8 +61,8 @@ class EnvScene(NamedTuple):
     caps: jnp.ndarray       # [M] f32
     d_im: jnp.ndarray       # [N, M] f32
     gnn_vec: jnp.ndarray    # [N] f32 — user share of Eqs. (10)–(11)
-    zeta_im: jnp.ndarray    # [] f32
-    zeta_kl: jnp.ndarray    # [] f32
+    zeta_im: jnp.ndarray    # [M] f32 — per-server ς_{i,m} (scalars broadcast)
+    zeta_kl: jnp.ndarray    # [M, M] f32 — per-pair ς_{k,l} (scalars broadcast)
     zeta_sp: jnp.ndarray    # [] f32 — ζ in Eq. (25)
     sub_w: jnp.ndarray      # [] f32 — 1.0 ⇒ R_sp on, 0.0 ⇒ DRL-only ablation
     cost_scale: jnp.ndarray  # [] f32 — reward normalizer
@@ -106,7 +106,11 @@ def _scene_core(net: EdgeNetwork, state: GraphState, subgraph: jnp.ndarray,
         caps=jnp.asarray(net.capacity, jnp.float32),
         d_im=d_im.astype(jnp.float32),
         gnn_vec=(gnn_a * deg + gnn_b).astype(jnp.float32),
-        zeta_im=jnp.float32(net.zeta_im), zeta_kl=jnp.float32(net.zeta_kl),
+        zeta_im=jnp.broadcast_to(
+            jnp.asarray(net.zeta_im, jnp.float32), net.f_k.shape),
+        zeta_kl=jnp.broadcast_to(
+            jnp.asarray(net.zeta_kl, jnp.float32),
+            (net.f_k.shape[0], net.f_k.shape[0])),
         zeta_sp=jnp.asarray(zeta_sp, jnp.float32),
         sub_w=jnp.asarray(sub_w, jnp.float32),
         cost_scale=jnp.asarray(cost_scale, jnp.float32))
@@ -170,7 +174,10 @@ def env_reset(scene: EnvScene) -> EnvState:
     return EnvState(t=jnp.int32(0),
                     assign=jnp.full((n,), -1, jnp.int32),
                     load=jnp.zeros((m,), jnp.float32),
-                    done_m=jnp.zeros((m,), bool))
+                    # a zero-capacity server (down / fully degraded) must be
+                    # ineligible from the first placement, not just after it
+                    # fills — mirror of OffloadEnv.reset
+                    done_m=scene.caps <= 0.0)
 
 
 def _current_user(scene: EnvScene, es: EnvState) -> jnp.ndarray:
@@ -184,14 +191,15 @@ def marginal_cost(scene: EnvScene, es: EnvState, i, k) -> jnp.ndarray:
     m = scene.f_k.shape[0]
     bits = scene.kb[i] * KB
     t_up = bits / jnp.maximum(scene.rate_up[i, k], 1.0)
-    i_up = bits * scene.zeta_im
+    i_up = bits * scene.zeta_im[k]
     t_com = bits / scene.f_k[k]
     placed = (es.assign >= 0) & (es.assign != k)
     w = scene.adj[i] * placed
     pair = bits + scene.kb * KB
-    rate = scene.rate_sv[k, jnp.clip(es.assign, 0, m - 1)]
+    peer = jnp.clip(es.assign, 0, m - 1)
+    rate = scene.rate_sv[k, peer]
     t_tran = jnp.sum(w * pair / jnp.maximum(rate, 1.0))
-    i_com = jnp.sum(w * scene.zeta_kl * pair)
+    i_com = jnp.sum(w * scene.zeta_kl[k, peer] * pair)
     return t_up + i_up + t_com + t_tran + i_com + scene.gnn_vec[i]
 
 
@@ -245,8 +253,13 @@ def env_step(scene: EnvScene, es: EnvState, actions: jnp.ndarray):
     i = _current_user(scene, es)
     score = actions[:, 0] - actions[:, 1]
     eligible = ~es.done_m
-    eligible = jnp.where(eligible.any(), eligible,
-                         es.load == es.load.min())   # all full: least-loaded
+    # all full: least-loaded hosts the overflow — but never a zero-capacity
+    # (down) server while any server can still host at all
+    hosting = scene.caps > 0.0
+    load_h = jnp.where(hosting, es.load, jnp.inf)
+    fallback = jnp.where(hosting.any(), load_h == load_h.min(),
+                         es.load == es.load.min())
+    eligible = jnp.where(eligible.any(), eligible, fallback)
     k = jnp.argmax(jnp.where(eligible, score, -jnp.inf)).astype(jnp.int32)
     dc = marginal_cost(scene, es, i, k)
     valid = es.t < scene.num_steps

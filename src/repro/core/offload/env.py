@@ -69,8 +69,10 @@ class OffloadEnv:
         self.rate_sv = np.asarray(costs.server_rate(self.net))
         self.f_k = np.asarray(self.net.f_k)
         self.caps = np.asarray(self.net.capacity)
-        self.zeta_im = float(self.net.zeta_im)
-        self.zeta_kl = float(self.net.zeta_kl)
+        self.zeta_im = np.broadcast_to(
+            np.asarray(self.net.zeta_im, np.float32), (self.m,))
+        self.zeta_kl = np.broadcast_to(
+            np.asarray(self.net.zeta_kl, np.float32), (self.m, self.m))
         self.d_im = np.linalg.norm(
             self.pos[:, None, :] - np.asarray(self.net.server_pos)[None], axis=-1)
         # visit users subgraph-by-subgraph (the controller knows G_sub)
@@ -82,7 +84,8 @@ class OffloadEnv:
         self.t = 0
         self.assign = -np.ones(self.n, np.int64)
         self.load = np.zeros(self.m)
-        self.done_m = np.zeros(self.m, bool)
+        # zero-capacity servers (down/degraded) are ineligible from step 0
+        self.done_m = self.load >= self.caps
         return self._obs(), self._global_state()
 
     @property
@@ -106,7 +109,7 @@ class OffloadEnv:
         """ΔC of hosting user i on server k given the partial assignment."""
         bits = self.kb[i] * KB
         t_up = bits / max(self.rate_up[i, k], 1.0)
-        i_up = bits * self.zeta_im
+        i_up = bits * self.zeta_im[k]
         t_com = bits / self.f_k[k]
         t_tran = i_com = 0.0
         for j in np.nonzero(self.adj[i])[0]:
@@ -114,7 +117,7 @@ class OffloadEnv:
             if l >= 0 and l != k:
                 jbits = self.kb[j] * KB
                 t_tran += (bits + jbits) / max(self.rate_sv[k, l], 1.0)
-                i_com += self.zeta_kl * (bits + jbits)
+                i_com += self.zeta_kl[k, l] * (bits + jbits)
         return t_up + i_up + t_com + t_tran + i_com + self._user_gnn_energy(i)
 
     def _r_sp(self, i: int, k: int) -> float:
@@ -161,7 +164,14 @@ class OffloadEnv:
         score = actions[:, 0] - actions[:, 1]
         eligible = ~self.done_m
         if not eligible.any():          # all servers full: least-loaded hosts
-            eligible = self.load == self.load.min()
+            # ...but never a zero-capacity (down) server while any server
+            # can still host at all
+            hosting = self.caps > 0.0
+            if hosting.any():
+                load_h = np.where(hosting, self.load, np.inf)
+                eligible = load_h == load_h.min()
+            else:
+                eligible = self.load == self.load.min()
         k = int(np.argmax(np.where(eligible, score, -np.inf)))
         dc = self.marginal_cost(i, k)
         r_sp = self._r_sp(i, k) if self.use_subgraph_reward else 0.0

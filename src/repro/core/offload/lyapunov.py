@@ -79,7 +79,11 @@ def _lyapunov_choice(scene: EnvScene, es, q: jnp.ndarray,
     dc = _marginal_cost_all(scene, es, i)
     score = q + v_weight * dc / scene.cost_scale
     eligible = ~es.done_m
-    eligible = jnp.where(eligible.any(), eligible, es.load == es.load.min())
+    hosting = scene.caps > 0.0          # never a down server while any hosts
+    load_h = jnp.where(hosting, es.load, jnp.inf)
+    fallback = jnp.where(hosting.any(), load_h == load_h.min(),
+                         es.load == es.load.min())
+    eligible = jnp.where(eligible.any(), eligible, fallback)
     return jnp.argmin(jnp.where(eligible, score, jnp.inf)).astype(jnp.int32)
 
 
@@ -140,10 +144,11 @@ def _marginal_cost_all_np(sc: dict, assign: np.ndarray, i: int
     placed = (assign[None, :] >= 0) & (assign[None, :] != ks[:, None])
     w = sc["adj"][i][None, :] * placed                       # [M, N]
     pair = bits + sc["kb"] * kb32
-    rate = sc["rate_sv"][:, np.clip(assign, 0, m - 1)]       # [M, N]
+    peer = np.clip(assign, 0, m - 1)
+    rate = sc["rate_sv"][:, peer]                            # [M, N]
     t_tran = np.sum(w * pair[None, :] / np.maximum(rate, np.float32(1.0)),
                     axis=1, dtype=np.float32)
-    i_com = np.sum(w * sc["zeta_kl"] * pair[None, :], axis=1,
+    i_com = np.sum(w * sc["zeta_kl"][:, peer] * pair[None, :], axis=1,
                    dtype=np.float32)
     return t_up + i_up + t_com + t_tran + i_com + sc["gnn_vec"][i]
 
@@ -164,7 +169,12 @@ def run_lyapunov(env: OffloadEnv, v_weight: float = DEFAULT_V) -> dict:
         score = q + np.float32(v_weight) * dc / sc["cost_scale"]
         eligible = ~env.done_m
         if not eligible.any():
-            eligible = env.load == env.load.min()
+            hosting = env.caps > 0.0    # never a down server while any hosts
+            if hosting.any():
+                load_h = np.where(hosting, env.load, np.inf)
+                eligible = load_h == load_h.min()
+            else:
+                eligible = env.load == env.load.min()
         k = int(np.argmin(np.where(eligible, score, np.inf)))
         _, _, rew, _, _ = env.step(_force_server(env, k))
         total_r += float(rew.sum())

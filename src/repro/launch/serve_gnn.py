@@ -17,6 +17,13 @@ scan for the ``JitPolicy`` entries ``greedy_jit``/``local_jit``/
 topology interval; repeats hit the plan cache. Every output is checked
 against the single-device ``gcn_apply`` oracle.
 
+``--faults`` arms the deterministic chaos harness (DESIGN.md §9) on the
+raw engine: the schedule's *user* waves churn the request stream (applied
+in the generator, request-index clock) while its *server* events drive the
+engine's drain-then-swap migration — the in-flight forward completes on
+the old network, then the plan caches are invalidated and every later
+decision prices against the degraded topology.
+
 ``--dataset`` switches to large-graph mode (the Fig. 6 axis): serve one of
 the synthetic citation datasets (``synth-pubmed`` is ~20k vertices) or a
 ``random`` graph of ``--vertices``/``--edges``, partitioned by HiCut on the
@@ -64,6 +71,13 @@ def _parse_args() -> argparse.Namespace:
     ap.add_argument("--partitioner", default="hicut_jax")
     ap.add_argument("--policy", default="greedy_jit")
     ap.add_argument("--change-rate", type=float, default=0.2)
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault schedule: comma-separated "
+                         "'cycle:kind[:arg[:scale]]' items, e.g. "
+                         "'1:server_down:1,2:arrive:4,4:server_up:1' "
+                         "(cycles are request indices on the raw engine)")
+    ap.add_argument("--faults-seed", type=int, default=0,
+                    help="rng seed for fault-schedule user-churn waves")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dataset", default="",
                     help="large-graph mode: synth-citeseer | synth-cora | "
@@ -166,7 +180,8 @@ def main() -> None:
     from repro.core.api import GraphEdgeController
     from repro.core.dynamic_graph import perturb_scenario, random_scenario
     from repro.gnn.layers import gcn_apply, gcn_init
-    from repro.serve import ServeRequest, ServingEngine
+    from repro.serve import (FaultInjector, FaultSchedule, ServeRequest,
+                             ServingEngine)
 
     rng = np.random.default_rng(args.seed)
     capacity = args.capacity or args.users + 8
@@ -182,21 +197,36 @@ def main() -> None:
                            axis="servers", num_devices=devices,
                            plan_cache_size=args.plan_cache_size)
 
+    user_inj = server_inj = None
+    if args.faults:
+        schedule = FaultSchedule.parse(args.faults)
+        # split clocks: user waves churn the stream in the generator,
+        # server events drive the engine's drain-then-swap migration
+        user_inj = FaultInjector(schedule.user_events(), net,
+                                 state=state, seed=args.faults_seed)
+        server_inj = FaultInjector(schedule.server_events(), net)
+
     def requests():
         nonlocal state
+        idx = 0
         for t in range(args.steps):
             if t:
                 state = perturb_scenario(rng, state, args.change_rate)
             for _ in range(args.requests_per_step):
+                if user_inj is not None:
+                    upd = user_inj.poll(idx)
+                    if upd is not None and upd.state is not None:
+                        state = upd.state
                 x = rng.normal(size=(capacity, args.features))
                 yield ServeRequest(state, x.astype(np.float32))
+                idx += 1
 
     total = args.steps * args.requests_per_step
     print(f"serving {total} requests over {args.steps} dynamic steps: "
           f"{args.users} users, {devices} mesh devices, "
           f"{args.partitioner} + {args.policy} (pipelined engine)")
     t0 = time.perf_counter()
-    for res in engine.serve(requests()):
+    for res in engine.serve(requests(), faults=server_inj):
         st = res.request.state
         oracle = np.asarray(gcn_apply(params, jnp.asarray(res.request.x),
                                       st.adj, st.mask))
@@ -215,6 +245,11 @@ def main() -> None:
           f"partition cache: {cc.hits} hits / {cc.misses} misses  "
           f"plan cache: {pc.hits} hits / {pc.misses} misses "
           f"({pc.currsize}/{pc.maxsize} entries)")
+    if server_inj is not None:
+        applied = len(server_inj.applied) + len(user_inj.applied)
+        print(f"faults: {applied} events applied  "
+              f"net_swaps={engine.net_swaps}  "
+              f"servers up={server_inj.num_up}/{args.devices}")
 
 
 if __name__ == "__main__":

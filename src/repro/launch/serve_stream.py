@@ -16,7 +16,15 @@ requests sharing a cached plan into continuous batches of up to
 ``--v``/``--theta`` drift-plus-penalty knobs, ``static`` priority, or
 ``admit_all``) and prints the SLO telemetry: per-phase
 p50/p95/p99 latency, sustained req/s, and the conservation ledger
-(admitted + rejected + deferred == submitted).
+(admitted + rejected + deferred + migrated == submitted).
+
+``--faults`` arms the deterministic chaos harness (DESIGN.md §9): a
+comma-separated ``cycle:kind[:arg[:scale]]`` schedule of server failures /
+recoveries / degradations and user arrival/departure waves, applied at
+pump-cycle boundaries through :class:`repro.serve.FaultInjector`. Server
+events reprice the network, migrate every queued request to a warm-recut
+plan (nothing is lost — the conservation ledger still balances) and are
+reported with per-fault recovery latency.
 
 Every served output is checked against the single-device ``gcn_apply``
 oracle — batched members must match the sequential result exactly.
@@ -65,6 +73,14 @@ def _parse_args() -> argparse.Namespace:
                     help="weighted per-tenant service shares for the "
                          "lyapunov controller, e.g. '0:3,1:1' (tenants "
                          "not listed default to weight 1)")
+    ap.add_argument("--faults", default="",
+                    help="deterministic fault schedule: comma-separated "
+                         "'cycle:kind[:arg[:scale]]' items, e.g. "
+                         "'2:server_down:1,4:arrive:6,7:server_up:1' "
+                         "(kinds: server_down, server_up, degrade, arrive, "
+                         "depart; cycles are pump cycles)")
+    ap.add_argument("--faults-seed", type=int, default=0,
+                    help="rng seed for fault-schedule user-churn waves")
     ap.add_argument("--cross-topology", action="store_true",
                     help="batch requests across topologies: one dispatch "
                          "serves different cached plans padded to a "
@@ -100,7 +116,8 @@ def main() -> None:
     from repro.core.api import GraphEdgeController
     from repro.core.dynamic_graph import perturb_scenario, random_scenario
     from repro.gnn.layers import gcn_apply, gcn_init
-    from repro.serve import (AdmitAll, LyapunovAdmission, ServingEngine,
+    from repro.serve import (AdmitAll, FaultInjector, FaultSchedule,
+                             LyapunovAdmission, ServingEngine,
                              StaticPriorityAdmission, StreamRequest,
                              StreamingFrontend, poisson_workload)
 
@@ -134,20 +151,29 @@ def main() -> None:
         admission = StaticPriorityAdmission()
     else:
         admission = AdmitAll()
-    frontend = StreamingFrontend(engine=engine,
-                                 queue_depth=args.queue_depth,
-                                 max_batch=args.max_batch,
-                                 admission=admission,
-                                 cross_topology=args.cross_topology)
-
     states = [random_scenario(rng, capacity, args.users, 3 * args.users)]
     for _ in range(args.topologies - 1):
         states.append(perturb_scenario(rng, states[-1], args.change_rate))
     deadline = args.deadline if args.deadline > 0 else None
 
+    faults = None
+    if args.faults:
+        faults = FaultInjector(FaultSchedule.parse(args.faults), net,
+                               state=states[0], seed=args.faults_seed)
+    frontend = StreamingFrontend(engine=engine,
+                                 queue_depth=args.queue_depth,
+                                 max_batch=args.max_batch,
+                                 admission=admission,
+                                 cross_topology=args.cross_topology,
+                                 faults=faults)
+
     def make_request(i: int) -> StreamRequest:
+        # under fault churn the injector's evolving layout is the request
+        # source (lazy workload: snapshotted at arrival, not construction)
+        state = faults.state if faults is not None and \
+            faults.state is not None else states[i % len(states)]
         x = rng.normal(size=(capacity, args.features)).astype(np.float32)
-        return StreamRequest(states[i % len(states)], x,
+        return StreamRequest(state, x,
                              tenant=i % args.tenants, deadline=deadline)
 
     print(f"streaming {args.count} requests @ {args.arrival_rate} req/s "
@@ -156,7 +182,7 @@ def main() -> None:
           f"queue_depth={args.queue_depth}, max_batch={args.max_batch}, "
           f"admission={args.admission}, {devices} mesh devices")
     workload = poisson_workload(rng, args.arrival_rate, args.count,
-                                make_request)
+                                make_request, lazy=faults is not None)
     results = frontend.run_threaded(workload) if args.threaded \
         else frontend.run(workload)
 
@@ -193,6 +219,17 @@ def main() -> None:
     pc = engine.plan_cache_info()
     print(f"plan cache: {pc.hits} hits / {pc.misses} misses "
           f"({pc.currsize}/{pc.maxsize} entries)")
+    if faults is not None:
+        print(f"faults: migrated={stats['requests_migrated']} "
+              f"(served {stats['migrated_served']})  "
+              f"net_swaps={engine.net_swaps}  "
+              f"servers up={faults.num_up}/{args.devices}")
+        for rec in frontend.fault_trace:
+            kinds = ",".join(e["kind"] for e in rec["events"])
+            print(f"  cycle {rec['cycle']}: {kinds}  "
+                  f"queued={rec['queued']} migrated={rec['migrated']} "
+                  f"recut={rec['recut_topologies']} "
+                  f"recovery={rec.get('recovery_cycles', '-')} cycles")
     assert stats["conservation_ok"], "request accounting does not conserve"
 
 

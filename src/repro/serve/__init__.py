@@ -10,10 +10,16 @@ top of it: a bounded :class:`RequestQueue` with explicit backpressure,
 continuous batching of concurrent requests sharing a cached plan,
 Lyapunov drift-plus-penalty admission control per tenant, and per-request
 SLO telemetry (``repro.serve.metrics``) — DESIGN.md §7.
+
+``repro.serve.faults`` is the deterministic chaos harness: seedable
+:class:`FaultSchedule` timelines of server failures/recoveries and user
+churn waves, injected into the engine/front-end through a clock-driven
+:class:`FaultInjector` with drain-then-swap live migration — DESIGN.md §9.
 ``repro.launch.serve_gnn`` / ``repro.launch.serve_stream`` are the CLIs.
 """
 from repro.serve.engine import (PlanEntry, ServeRequest, ServeResult,
-                                ServingEngine)
+                                ServingEngine, network_digest)
+from repro.serve.faults import FaultInjector, FaultSchedule, FaultUpdate
 from repro.serve.frontend import (AdmitAll, LyapunovAdmission, RequestQueue,
                                   StaticPriorityAdmission, StreamRequest,
                                   StreamResult, StreamingFrontend,
@@ -22,9 +28,10 @@ from repro.serve.metrics import (CycleTelemetry, ManualClock, MonotonicClock,
                                  RequestTiming, summarize)
 
 __all__ = [
-    "AdmitAll", "CycleTelemetry", "LyapunovAdmission", "ManualClock",
+    "AdmitAll", "CycleTelemetry", "FaultInjector", "FaultSchedule",
+    "FaultUpdate", "LyapunovAdmission", "ManualClock",
     "MonotonicClock", "PlanEntry", "RequestQueue", "RequestTiming",
     "ServeRequest", "ServeResult", "ServingEngine",
     "StaticPriorityAdmission", "StreamRequest", "StreamResult",
-    "StreamingFrontend", "poisson_workload", "summarize",
+    "StreamingFrontend", "network_digest", "poisson_workload", "summarize",
 ]

@@ -73,6 +73,21 @@ def _assignment_digest(servers: np.ndarray) -> str:
     return h.hexdigest()
 
 
+def network_digest(net) -> str:
+    """Fingerprint of an :class:`~repro.core.costs.EdgeNetwork`'s pricing
+    surface (capacities, rates, energy constants). Part of the plan-cache
+    key: two identical (topology, assignment) pairs priced under different
+    networks must NOT share a plan entry — a capacity swap (fault event,
+    degradation) would otherwise keep serving plans whose placement the
+    live network can no longer host. Cheap: only recomputed on
+    :meth:`ServingEngine.swap_network`, never per request."""
+    h = hashlib.blake2b(digest_size=16)
+    for leaf in net:
+        h.update(np.ascontiguousarray(
+            np.asarray(leaf, np.float64)).tobytes())
+    return h.hexdigest()
+
+
 @dataclass
 class PlanEntry:
     """One plan-cache value: the plan, its prepared single-request forward,
@@ -84,7 +99,7 @@ class PlanEntry:
     LRU together with the plan. ``bucket`` memoizes the shape bucket along
     with the family quantum it was computed at (``bucket_quantum``), so the
     engine can re-bucket the entry when its family's quantum adapts."""
-    key: tuple[str, str]
+    key: tuple[str, str, str]     # (topology, assignment, network) digests
     plan: PartitionPlan
     forward: Callable
     batched: Callable | None = None
@@ -144,17 +159,23 @@ class ServingEngine:
         self._plan_cache = LruCache(self.plan_cache_size)
         self._multi_cache = LruCache(self.plan_cache_size)
         self._bucket_families: dict[tuple, BucketFamily] = {}
+        self._net_key = network_digest(self.controller.net)
+        self.net_swaps = 0
 
     # -- control + plan stage ------------------------------------------------
     def _plan_for(self, decision: Decision) -> tuple[PlanEntry, bool]:
         """Plan + prepared forward for a decision, through the LRU cache.
 
-        Keyed on (topology fingerprint, assignment digest): the plan is a
-        pure function of the edge list and the user→server placement, so
-        repeated requests on an unchanged topology whose policy reproduces
-        the same assignment reuse both the plan and its jitted forward."""
+        Keyed on (topology fingerprint, assignment digest, network
+        digest): the plan is a pure function of the edge list and the
+        user→server placement, so repeated requests on an unchanged
+        topology whose policy reproduces the same assignment reuse both
+        the plan and its jitted forward. The network digest rotates on
+        :meth:`swap_network`, so entries priced under a stale network
+        (pre-fault capacities) can never be served again — see the
+        regression test in ``tests/test_faults.py``."""
         topo = decision.topo_key or topology_key(decision.state)
-        key = (topo, _assignment_digest(decision.servers))
+        key = (topo, _assignment_digest(decision.servers), self._net_key)
         hit = self._plan_cache.get(key)
         if hit is not None:
             return hit, True
@@ -268,8 +289,23 @@ class ServingEngine:
         self._multi_cache.put(key, (plans, forward))
         return plans, forward
 
+    # -- network swap (fault migration) --------------------------------------
+    def swap_network(self, net) -> None:
+        """Install a repriced :class:`~repro.core.costs.EdgeNetwork` (fault
+        event: server down/up, degradation). Rotates the plan-cache network
+        digest so every entry built against the old pricing misses from now
+        on (cross-topology stacked forwards key on entry keys, so they
+        rotate with it), and flushes the controller's partition cache —
+        cached cuts may target a server count the new network no longer
+        has. Callers that want warm-started re-cuts install them afterwards
+        via ``controller.recut_warm`` (see ``repro.serve.frontend``)."""
+        self.controller.net = net
+        self.controller.invalidate_partitions()
+        self._net_key = network_digest(net)
+        self.net_swaps += 1
+
     # -- serving -------------------------------------------------------------
-    def serve(self, requests: Iterable[ServeRequest]
+    def serve(self, requests: Iterable[ServeRequest], faults=None
               ) -> Iterator[ServeResult]:
         """Serve a request stream, pipelined at depth 1.
 
@@ -281,7 +317,15 @@ class ServingEngine:
         A failing request never loses the one already in flight: if the
         decide/dispatch of request t raises (bad state, failing policy,
         poisoned iterator), request t−1's pending result is flushed to the
-        consumer first and the exception re-raised on the next pull."""
+        consumer first and the exception re-raised on the next pull.
+
+        ``faults`` (a :class:`repro.serve.faults.FaultInjector`) is polled
+        once per request with the request index as the logical clock. When
+        an update reprices the network, the engine **drains then swaps**:
+        the in-flight forward (built against the old plan) is finished and
+        yielded first, then :meth:`swap_network` installs the new pricing —
+        so no request is ever served against a plan/network mix and none is
+        lost (DESIGN.md §9)."""
         pending = None
         it = enumerate(requests)
         while True:
@@ -290,6 +334,12 @@ class ServingEngine:
                     t, req = next(it)
                 except StopIteration:
                     break
+                update = faults.poll(t) if faults is not None else None
+                if update is not None and update.net is not None:
+                    if pending is not None:   # drain before repricing
+                        res, pending = self._finish(*pending), None
+                        yield res
+                    self.swap_network(update.net)
                 decision, plan, forward, hit = self.decide(req.state)
                 x_blocks = plan.scatter(np.asarray(req.x, np.float32))
                 out = forward(x_blocks, self.params)    # async dispatch
@@ -304,9 +354,9 @@ class ServingEngine:
         if pending is not None:
             yield self._finish(*pending)
 
-    def serve_all(self, requests: Iterable[ServeRequest]
+    def serve_all(self, requests: Iterable[ServeRequest], faults=None
                   ) -> list[ServeResult]:
-        return list(self.serve(requests))
+        return list(self.serve(requests, faults=faults))
 
     def _finish(self, t, req, decision, plan, out, hit) -> ServeResult:
         output = plan.gather(np.asarray(out))       # blocks on fetch only

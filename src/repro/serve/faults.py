@@ -1,0 +1,249 @@
+"""Deterministic fault injection for the serving tier (DESIGN.md §9).
+
+The paper's claim is *dynamic adaptation* — GraphEdge re-cuts and
+re-offloads as the environment shifts — but a change-rate perturbation
+never exercises the hard regime: an edge server dropping out mid-stream, a
+wave of users arriving at once, a server limping along at half capacity.
+This module provides the chaos harness every such scenario plugs into:
+
+* :class:`FaultSchedule` — an immutable, sorted list of
+  :class:`~repro.core.dynamic_graph.GraphEvent` entries on a **logical
+  clock** (frontend pump cycles, or request indices for the raw engine).
+  Built from an explicit event list, parsed from a compact CLI spec
+  (:meth:`FaultSchedule.parse` — the ``--faults`` flag of ``serve_stream``
+  / ``serve_gnn``), or sampled reproducibly (:meth:`FaultSchedule.random`).
+* :class:`FaultInjector` — the clock-driven hook. It owns the base
+  :class:`~repro.core.costs.EdgeNetwork`, a cumulative
+  :class:`~repro.core.costs.ServerProfile`, and (optionally) the evolving
+  user :class:`~repro.core.dynamic_graph.GraphState`. ``poll(cycle)``
+  applies every event due at or before ``cycle`` exactly once and returns
+  a :class:`FaultUpdate`; the consumer decides how to react
+  (``ServingEngine.serve`` drains then swaps, ``StreamingFrontend.pump``
+  additionally migrates its queue and warm-recuts — DESIGN.md §9 has the
+  sequence diagram).
+
+Determinism is the contract: the schedule is data, the injector's own rng
+is seeded, and user waves consume randomness in event order — same seed +
+same schedule ⇒ identical event trace, identical degraded networks,
+identical churned states. Tests and the ``"mode": "failure"`` bench
+records lean on this to compare a faulted run against a re-planned oracle
+bitwise.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Iterator, Sequence
+
+import numpy as np
+
+from repro.core import costs
+from repro.core.dynamic_graph import (EVENT_ARRIVE, EVENT_DEGRADE,
+                                      EVENT_DEPART, EVENT_KINDS,
+                                      EVENT_SERVER_DOWN, EVENT_SERVER_UP,
+                                      SERVER_EVENTS, USER_EVENTS, GraphEvent,
+                                      GraphState, apply_user_event)
+
+# degraded compute/capacity never scale below this (a server that is
+# "down" is modeled by up=0, not by scale=0)
+_MIN_DEGRADE = 1e-3
+
+
+class FaultSchedule:
+    """A deterministic, sorted sequence of timed fault events.
+
+    Events are :class:`~repro.core.dynamic_graph.GraphEvent` tuples sorted
+    by ``cycle`` (stable in input order within a cycle). The schedule is
+    immutable — injectors keep a cursor into it, never mutate it."""
+
+    def __init__(self, events: Iterable[GraphEvent]):
+        evs = []
+        for ev in events:
+            ev = GraphEvent(*ev)
+            if ev.kind not in EVENT_KINDS:
+                raise ValueError(f"unknown event kind {ev.kind!r}; "
+                                 f"expected one of {EVENT_KINDS}")
+            evs.append(ev)
+        self.events: tuple[GraphEvent, ...] = tuple(
+            sorted(evs, key=lambda ev: ev.cycle))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self) -> Iterator[GraphEvent]:
+        return iter(self.events)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, FaultSchedule) and \
+            self.events == other.events
+
+    def __repr__(self) -> str:
+        return f"FaultSchedule({list(self.events)!r})"
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def parse(cls, spec: str) -> "FaultSchedule":
+        """Parse the compact ``--faults`` CLI format.
+
+        Comma-separated ``cycle:kind[:arg[:scale]]`` items, where ``arg``
+        is the server id for server events and the wave size for user
+        events, e.g. ``"2:server_down:1,4:arrive:6,7:server_up:1"`` or
+        ``"3:degrade:0:0.5"`` (server 0 at half capacity/compute)."""
+        events = []
+        for item in filter(None, (s.strip() for s in spec.split(","))):
+            parts = item.split(":")
+            if len(parts) < 2:
+                raise ValueError(f"bad fault item {item!r}; expected "
+                                 "'cycle:kind[:arg[:scale]]'")
+            cycle, kind = int(parts[0]), parts[1]
+            arg = int(parts[2]) if len(parts) > 2 else (1 if kind in
+                                                        USER_EVENTS else 0)
+            scale = float(parts[3]) if len(parts) > 3 else 0.5
+            if kind in USER_EVENTS:
+                events.append(GraphEvent(cycle, kind, count=arg))
+            else:
+                events.append(GraphEvent(cycle, kind, server=arg,
+                                         scale=scale))
+        return cls(events)
+
+    @classmethod
+    def random(cls, seed: int, cycles: int, num_servers: int,
+               p_server: float = 0.1, p_user: float = 0.2,
+               max_wave: int = 8) -> "FaultSchedule":
+        """Sample a reproducible schedule: per cycle, a server flips
+        down/up with prob ``p_server`` (downs and ups alternate per
+        server so the schedule is always consistent) and a user wave
+        arrives/departs with prob ``p_user``."""
+        rng = np.random.default_rng(seed)
+        down: set[int] = set()
+        events = []
+        for c in range(int(cycles)):
+            if rng.random() < p_server:
+                s = int(rng.integers(num_servers))
+                if s in down:
+                    down.discard(s)
+                    events.append(GraphEvent(c, EVENT_SERVER_UP, server=s))
+                else:
+                    down.add(s)
+                    events.append(GraphEvent(c, EVENT_SERVER_DOWN, server=s))
+            if rng.random() < p_user:
+                kind = EVENT_ARRIVE if rng.random() < 0.5 else EVENT_DEPART
+                events.append(GraphEvent(
+                    c, kind, count=int(rng.integers(1, max_wave + 1))))
+        return cls(events)
+
+    # -- views ---------------------------------------------------------------
+    def user_events(self) -> "FaultSchedule":
+        """Only the arrive/depart events (e.g. for pre-applying churn to a
+        request stream while the engine handles server events)."""
+        return FaultSchedule(ev for ev in self.events
+                             if ev.kind in USER_EVENTS)
+
+    def server_events(self) -> "FaultSchedule":
+        """Only the server down/up/degrade events."""
+        return FaultSchedule(ev for ev in self.events
+                             if ev.kind in SERVER_EVENTS)
+
+    def events_at(self, cycle: int) -> tuple[GraphEvent, ...]:
+        return tuple(ev for ev in self.events if ev.cycle == int(cycle))
+
+    def as_dicts(self) -> list[dict]:
+        return [ev._asdict() for ev in self.events]
+
+
+@dataclass(frozen=True)
+class FaultUpdate:
+    """What :meth:`FaultInjector.poll` hands back for one clock tick.
+
+    ``net`` is the repriced network when any *server* event fired (None ⇒
+    server health unchanged — consumers skip the swap/migration path
+    entirely); ``state`` is the churned user layout when any *user* event
+    fired (None ⇒ no churn). ``events`` lists exactly what was applied,
+    in order, for trace records."""
+    cycle: int
+    events: tuple[GraphEvent, ...]
+    net: costs.EdgeNetwork | None
+    state: GraphState | None
+    num_up: int
+
+
+class FaultInjector:
+    """Clock-driven fault hook: owns the cumulative server profile and the
+    evolving user state; ``poll(cycle)`` applies due events exactly once.
+
+    The injector is strictly forward-moving (a cursor over the sorted
+    schedule), so polling with a clock that skips cycles still applies
+    every intervening event — late, but never dropped or doubled."""
+
+    def __init__(self, schedule: FaultSchedule,
+                 net: costs.EdgeNetwork,
+                 state: GraphState | None = None, seed: int = 0):
+        self.schedule = schedule
+        self.base_net = net
+        m = int(np.asarray(net.f_k).shape[0])
+        self._up = np.ones(m, np.float32)
+        self._compute = np.ones(m, np.float32)
+        self._capacity = np.ones(m, np.float32)
+        self._energy = np.ones(m, np.float32)
+        self.state = state
+        self.rng = np.random.default_rng(seed)
+        self._cursor = 0
+        self.applied: list[GraphEvent] = []
+
+    @property
+    def num_up(self) -> int:
+        return int(self._up.sum())
+
+    def profile(self) -> costs.ServerProfile:
+        """The cumulative per-server health profile applied so far."""
+        import jax.numpy as jnp
+        return costs.ServerProfile(
+            up=jnp.asarray(self._up),
+            compute_scale=jnp.asarray(self._compute),
+            capacity_scale=jnp.asarray(self._capacity),
+            energy_scale=jnp.asarray(self._energy))
+
+    def network(self) -> costs.EdgeNetwork:
+        """The base network repriced under the current profile."""
+        return costs.degrade_network(self.base_net, self.profile())
+
+    def _apply_server(self, ev: GraphEvent) -> None:
+        s = int(ev.server)
+        if ev.kind == EVENT_SERVER_DOWN:
+            self._up[s] = 0.0
+        elif ev.kind == EVENT_SERVER_UP:
+            # recovery restores full health, not just reachability
+            self._up[s] = 1.0
+            self._compute[s] = self._capacity[s] = self._energy[s] = 1.0
+        elif ev.kind == EVENT_DEGRADE:
+            scale = max(float(ev.scale), _MIN_DEGRADE)
+            self._compute[s] = scale
+            self._capacity[s] = scale
+            self._energy[s] = 1.0 / scale   # degraded silicon burns hotter
+
+    def poll(self, cycle: int) -> FaultUpdate | None:
+        """Apply every not-yet-applied event with ``ev.cycle <= cycle``.
+
+        Returns None when nothing was due. User waves consume the
+        injector's rng in event order (the determinism contract)."""
+        due = []
+        events = self.schedule.events
+        while self._cursor < len(events) and \
+                events[self._cursor].cycle <= int(cycle):
+            due.append(events[self._cursor])
+            self._cursor += 1
+        if not due:
+            return None
+        server_changed = churned = False
+        for ev in due:
+            if ev.kind in SERVER_EVENTS:
+                self._apply_server(ev)
+                server_changed = True
+            elif self.state is not None:
+                self.state = apply_user_event(self.rng, self.state, ev)
+                churned = True
+            self.applied.append(ev)
+        return FaultUpdate(
+            cycle=int(cycle), events=tuple(due),
+            net=self.network() if server_changed else None,
+            state=self.state if churned else None,
+            num_up=self.num_up)

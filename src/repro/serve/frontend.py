@@ -61,6 +61,7 @@ from repro.core.dynamic_graph import GraphState
 from repro.core.offload.lyapunov import virtual_queue_update
 from repro.gnn.distributed import gather_multi, scatter_multi
 from repro.serve.engine import ServingEngine
+from repro.serve.faults import FaultInjector
 from repro.serve.metrics import (CycleTelemetry, ManualClock, MonotonicClock,
                                  RequestTiming, summarize)
 
@@ -95,6 +96,7 @@ class _Entry:
     deadline_tick: float | None      # absolute tick, None = best effort
     topo: str | None = None
     defers: int = 0
+    migrations: int = 0              # network swaps survived while queued
 
     def topo_key(self) -> str:
         if self.topo is None:
@@ -333,15 +335,21 @@ def _bucket(b: int, max_batch: int) -> int:
 @dataclass
 class FrontendStats:
     """Terminal-state counters. The conservation invariant —
-    ``admitted + rejected + deferred == submitted`` — holds at every
-    instant: ``deferred`` is the number of requests still queued (their
-    decision deferred to a later cycle); at the end of a drained run it
-    is 0 and every request is accounted admitted or rejected."""
+    ``admitted + rejected + deferred + migrated == submitted`` — holds at
+    every instant: ``deferred`` and ``migrated`` together are the requests
+    still queued (their decision deferred to a later cycle; ``migrated``
+    counts the queued requests that have survived ≥ 1 network swap and
+    will be re-planned against the new pricing); at the end of a drained
+    run both are 0 and every request is accounted admitted or rejected —
+    fault migrations lose nothing."""
     submitted: int = 0
     admitted: int = 0
     served: int = 0
     deferred: int = 0                 # currently queued (non-terminal)
+    migrated: int = 0                 # queued across ≥1 net swap (non-term.)
     defer_events: int = 0             # total individual defer decisions
+    requests_migrated: int = 0        # distinct requests ever migrated
+    migrated_served: int = 0          # migrated requests that reached serve
     rejected: dict[str, int] = field(default_factory=dict)
     batches: int = 0
     batched_requests: int = 0         # requests served in batches of ≥ 2
@@ -355,12 +363,15 @@ class FrontendStats:
     @property
     def conservation_ok(self) -> bool:
         return self.admitted + self.rejected_total + self.deferred \
-            == self.submitted
+            + self.migrated == self.submitted
 
     def as_dict(self) -> dict:
         return {"submitted": self.submitted, "admitted": self.admitted,
                 "served": self.served, "deferred": self.deferred,
+                "migrated": self.migrated,
                 "defer_events": self.defer_events,
+                "requests_migrated": self.requests_migrated,
+                "migrated_served": self.migrated_served,
                 "rejected": dict(self.rejected),
                 "rejected_total": self.rejected_total,
                 "batches": self.batches,
@@ -395,6 +406,7 @@ class StreamingFrontend:
         default_factory=MonotonicClock)
     service_ewma: float = 0.2        # EWMA weight of new service samples
     cross_topology: bool = False
+    faults: FaultInjector | None = None
 
     def __post_init__(self):
         self.queue = RequestQueue(self.queue_depth)
@@ -407,6 +419,10 @@ class StreamingFrontend:
         self._next_rid = 0
         self._lock = threading.Lock()   # guards queue + stats + telemetry
         self._topo_memo = LruCache(1024)
+        self._cycle = 0              # logical pump clock (drives faults)
+        self.fault_trace: list[dict] = []
+        self._awaiting_recovery: list[dict] = []
+        self._last_subgraph = LruCache(256)   # topo → last decided subgraph
 
     def _ewma(self, old: float, sample: float) -> float:
         return sample if old == 0.0 else \
@@ -456,15 +472,75 @@ class StreamingFrontend:
                            deadline_tick, topo=self._topo_key_of(req.state))
             if not self.queue.offer(entry):
                 self._reject(entry, REJECT_QUEUE_FULL, now)
-                self.stats.deferred = len(self.queue)
+                self._sync_queue_stats()
                 return False
-            self.stats.deferred = len(self.queue)
+            self._sync_queue_stats()
             return True
 
     def _reject(self, entry: _Entry, reason: str, tick: float) -> None:
         self.stats.rejected[reason] = self.stats.rejected.get(reason, 0) + 1
         self.rejections.append(Rejection(entry.rid, entry.req.tenant,
                                          reason, tick, entry.defers))
+
+    def _sync_queue_stats(self) -> None:
+        """Recount the non-terminal states from the queue itself (the
+        conservation invariant's ``deferred + migrated`` is always derived,
+        never incrementally drifted)."""
+        mig = sum(1 for e in self.queue if e.migrations)
+        self.stats.migrated = mig
+        self.stats.deferred = len(self.queue) - mig
+
+    # -- fault injection -----------------------------------------------------
+    def _poll_faults(self) -> None:
+        """Apply due fault events at a pump boundary (nothing in flight).
+
+        On a server event the engine's network is swapped FIRST (which
+        flushes the controller's topology-keyed partition cache) and every
+        still-queued topology with a recorded previous cut is then
+        warm-recut (:meth:`~repro.core.api.GraphEdgeController.recut_warm`)
+        against the surviving servers, so the next cycle's decisions start
+        from the migrated plan instead of a cold re-partition. Queued
+        requests are marked migrated — never dropped — and the migration
+        is appended to :attr:`fault_trace`."""
+        if self.faults is None:
+            return
+        update = self.faults.poll(self._cycle)
+        if update is None:
+            return
+        trace = {"cycle": self._cycle,
+                 "events": [ev._asdict() for ev in update.events],
+                 "num_up": update.num_up, "queued": len(self.queue),
+                 "migrated": 0, "recut_topologies": 0}
+        if update.net is not None:
+            for e in self.queue:
+                if e.migrations == 0:
+                    self.stats.requests_migrated += 1
+                e.migrations += 1
+            trace["migrated"] = len(self.queue)
+            # swap (flushes partition cache) BEFORE installing warm cuts
+            self.engine.swap_network(update.net)
+            seen: set[str] = set()
+            for e in self.queue:
+                topo = e.topo_key()
+                if topo in seen:
+                    continue
+                seen.add(topo)
+                prev = self._last_subgraph.get(topo)
+                if prev is None:
+                    continue
+                self.engine.controller.recut_warm(
+                    e.req.state, prev, num_parts=max(1, update.num_up))
+                trace["recut_topologies"] += 1
+            self._awaiting_recovery.append(trace)
+            self._sync_queue_stats()
+        self.fault_trace.append(trace)
+
+    def _mark_recovered(self) -> None:
+        """Stamp recovery latency (in pump cycles, inclusive) on every
+        pending migration once a cycle serves results again."""
+        for rec in self._awaiting_recovery:
+            rec["recovery_cycles"] = self._cycle - rec["cycle"] + 1
+        self._awaiting_recovery.clear()
 
     # -- one scheduling cycle ------------------------------------------------
     def pump(self) -> list[StreamResult]:
@@ -483,6 +559,7 @@ class StreamingFrontend:
         results of this cycle (possibly [])."""
         with self._lock:
             now = self.clock.now()
+            self._poll_faults()       # pump boundary: nothing in flight
             backlog = len(self.queue)
             est_service = self.est_service(backlog)
             batch: list[_Entry] = []
@@ -512,12 +589,16 @@ class StreamingFrontend:
                 else:
                     self._reject(entry, REJECT_ADMISSION, now)
             self.queue.replace(survivors)
-            self.stats.deferred = len(self.queue)
+            self._sync_queue_stats()
         if not batch:
             self.admission.on_cycle(0, now)
+            self._cycle += 1
             return []
         results = self._serve_cycle(batch)
         self.admission.on_cycle(len(batch), self.clock.now())
+        if results:
+            self._mark_recovered()
+        self._cycle += 1
         return results
 
     def _serve_cycle(self, batch: list[_Entry]) -> list[StreamResult]:
@@ -536,6 +617,10 @@ class StreamingFrontend:
         topos = list(by_topo)
         decided = dict(zip(topos, self.engine.decide_entries(
             [by_topo[t][0].req.state for t in topos])))
+        for t in topos:
+            # remembered as the warm-start seed for fault-time re-cuts
+            self._last_subgraph.put(
+                t, np.asarray(decided[t][0].partition.subgraph))
         t_decided = self.clock.now()
         # 2. group members by plan (same-topo mode) or shape bucket
         groups: dict[tuple, list[_Entry]] = {}
@@ -595,6 +680,8 @@ class StreamingFrontend:
                     decision, pe, hit = decided[e.topo_key()]
                     e.timing.dispatch = t_dispatch
                     e.timing.done = t_done
+                    if e.migrations:
+                        self.stats.migrated_served += 1
                     self.timings.append(e.timing)
                     all_results.append(StreamResult(
                         e.rid, e.req, output, e.timing, bsz, hit,
@@ -690,11 +777,18 @@ class StreamingFrontend:
 
 
 def poisson_workload(rng: np.random.Generator, rate: float, count: int,
-                     make_request) -> list[tuple[float, StreamRequest]]:
+                     make_request, lazy: bool = False
+                     ) -> Iterable[tuple[float, StreamRequest]]:
     """Open-loop Poisson-process workload: ``count`` arrivals at ``rate``
     requests/tick (exponential inter-arrival gaps), each request built by
     ``make_request(i)``. The standard "millions of independent users"
-    arrival model — bursts and lulls included."""
+    arrival model — bursts and lulls included. With ``lazy=True`` the
+    requests are built one-by-one *at injection time* (a generator), so a
+    ``make_request`` that snapshots a mutating state — e.g. the fault
+    injector's churned user graph — sees the state as of each arrival
+    instead of as of workload construction."""
     gaps = rng.exponential(1.0 / float(rate), size=count)
     offsets = np.cumsum(gaps)
+    if lazy:
+        return ((float(offsets[i]), make_request(i)) for i in range(count))
     return [(float(offsets[i]), make_request(i)) for i in range(count)]

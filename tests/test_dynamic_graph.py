@@ -1,8 +1,15 @@
-"""Dynamic graph model (§3.2): mask module + position attribute semantics."""
+"""Dynamic graph model (§3.2): mask module + position attribute semantics,
+plus the property suite over churn (``perturb_scenario`` /
+``add_users`` / ``remove_users`` / the fault-event waves): adjacency stays
+symmetric with a zero diagonal, inactive rows/columns carry no edges, and
+``num_active`` always equals the mask population."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dynamic_graph import (GraphState, add_users,
+from _hyp import given, settings, st
+from repro.core.dynamic_graph import (EVENT_ARRIVE, EVENT_DEPART, GraphEvent,
+                                      GraphState, add_users, apply_user_event,
+                                      arrival_wave, departure_wave,
                                       make_graph_state, move_users,
                                       perturb_scenario, random_scenario,
                                       remove_users, rewire)
@@ -81,3 +88,109 @@ def test_perturb_keeps_invariants(rng):
         # no edges incident to masked vertices
         assert np.all(adj[mask == 0] == 0)
         assert np.all(adj[:, mask == 0] == 0)
+
+
+# -- property suite: every churn path preserves the layout invariants --------
+
+def _assert_layout_invariants(state: GraphState) -> None:
+    """The §3.2 contract every mutation must preserve: symmetric adjacency,
+    zero diagonal, no edges or task bits on inactive slots, binary mask,
+    and ``num_active`` equal to the mask population."""
+    adj = np.asarray(state.adj)
+    mask = np.asarray(state.mask)
+    np.testing.assert_array_equal(adj, adj.T)
+    assert np.all(np.diagonal(adj) == 0)
+    assert np.all(adj[mask == 0] == 0)
+    assert np.all(adj[:, mask == 0] == 0)
+    assert np.all((mask == 0) | (mask == 1))
+    assert np.all(np.asarray(state.task_kb)[mask == 0] == 0)
+    assert float(state.num_active()) == mask.sum()
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([0.1, 0.3, 0.6]))
+def test_property_perturb_preserves_invariants(seed, rate):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, 20, 14, 30)
+    for _ in range(3):
+        state = perturb_scenario(rng, state, rate)
+        _assert_layout_invariants(state)
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12))
+def test_property_arrival_wave_counts_and_invariants(seed, count):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, 16, 9, 20)
+    before = int(np.asarray(state.mask).sum())
+    grown = arrival_wave(rng, state, count)
+    _assert_layout_invariants(grown)
+    want = before + min(count, state.capacity - before)
+    assert int(np.asarray(grown.mask).sum()) == want
+    # arrivals only ever activate — nobody already active is touched
+    assert np.all(np.asarray(grown.mask) >= np.asarray(state.mask))
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12))
+def test_property_departure_wave_counts_and_invariants(seed, count):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, 16, 9, 20)
+    before = int(np.asarray(state.mask).sum())
+    shrunk = departure_wave(rng, state, count)
+    _assert_layout_invariants(shrunk)
+    assert int(np.asarray(shrunk.mask).sum()) == before - min(count, before)
+    assert np.all(np.asarray(shrunk.mask) <= np.asarray(state.mask))
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**16))
+def test_property_add_users_arbitrary_adjacency(seed, adj_seed):
+    """``add_users`` must sanitize an *arbitrary* (asymmetric, self-looped,
+    mask-violating) proposed adjacency into a legal layout."""
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, 12, 6, 12)
+    mask = np.asarray(state.mask)
+    add = ((np.random.default_rng(adj_seed).random(12) < 0.5)
+           & (mask == 0)).astype(np.float32)
+    raw = (np.random.default_rng(adj_seed + 1)
+           .random((12, 12)) < 0.4).astype(np.float32)   # deliberately dirty
+    grown = add_users(state, jnp.asarray(add),
+                      jnp.asarray(rng.uniform(0, 100, (12, 2))
+                                  .astype(np.float32)),
+                      jnp.asarray(rng.uniform(1, 9, 12).astype(np.float32)),
+                      jnp.asarray(raw))
+    _assert_layout_invariants(grown)
+    assert int(np.asarray(grown.mask).sum()) == int(mask.sum() + add.sum())
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**16))
+def test_property_remove_users_subset(seed, drop_seed):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, 12, 8, 16)
+    drop = (np.random.default_rng(drop_seed).random(12) < 0.4) \
+        .astype(np.float32)
+    shrunk = remove_users(state, jnp.asarray(drop))
+    _assert_layout_invariants(shrunk)
+    gone = (np.asarray(state.mask) > 0) & (drop > 0)
+    assert int(np.asarray(shrunk.mask).sum()) == \
+        int(np.asarray(state.mask).sum()) - int(gone.sum())
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([EVENT_ARRIVE,
+                                                   EVENT_DEPART]),
+       st.integers(1, 6))
+def test_property_apply_user_event_matches_wave(seed, kind, count):
+    """The event dispatcher is exactly the wave helpers (same rng stream ⇒
+    bitwise-identical states) — the fault injector's determinism rests on
+    this."""
+    state = random_scenario(np.random.default_rng(seed), 14, 8, 18)
+    via_event = apply_user_event(np.random.default_rng(seed + 1), state,
+                                 GraphEvent(0, kind, count=count))
+    wave = arrival_wave if kind == EVENT_ARRIVE else departure_wave
+    direct = wave(np.random.default_rng(seed + 1), state, count)
+    for a, b in zip(via_event, direct):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    _assert_layout_invariants(via_event)

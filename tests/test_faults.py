@@ -1,0 +1,395 @@
+"""Fault injection + live migration (DESIGN.md §9).
+
+Covers the whole chaos path: schedule construction/parsing determinism,
+per-server network degradation (``ServerProfile``/``degrade_network``),
+the offload scheduler refusing a down server, the injector's cumulative
+profile state machine, the engine's network-keyed plan cache and
+drain-then-swap migration (bitwise equal to per-phase fresh oracles), the
+streaming front-end's migration ledger (conservation:
+``admitted + rejected + deferred + migrated == submitted`` with zero lost
+requests and a deterministic trace), and the warm-started multilevel
+re-cut. The slow lane runs the ``serve_stream --faults`` CLI end to end.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.core import costs
+from repro.core.api import GraphEdgeController
+from repro.core.dynamic_graph import (EVENT_ARRIVE, EVENT_DEPART,
+                                      EVENT_SERVER_DOWN, EVENT_SERVER_UP,
+                                      GraphEvent, random_scenario)
+from repro.core.multilevel import multilevel_partition
+from repro.gnn.layers import gcn_init
+from repro.serve import (FaultInjector, FaultSchedule, ManualClock,
+                         ServeRequest, ServingEngine, StreamRequest,
+                         StreamingFrontend, network_digest, poisson_workload)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def scenario(seed=0, capacity=24, users=18, servers=4):
+    rng = np.random.default_rng(seed)
+    state = random_scenario(rng, capacity, users, 2 * users)
+    net = costs.default_network(rng, capacity, servers)
+    return state, net, rng
+
+
+def make_engine(net, seed=0, devices=1, **kw):
+    ctrl = GraphEdgeController(net=net, policy="greedy_jit",
+                               partitioner="hicut_jax")
+    params = gcn_init(jax.random.PRNGKey(seed), [8, 6, 4])
+    mesh = Mesh(np.array(jax.devices()[:devices]), ("servers",))
+    return ServingEngine(controller=ctrl, params=params, mesh=mesh, **kw)
+
+
+# -- FaultSchedule -----------------------------------------------------------
+
+def test_schedule_parse_roundtrip_and_sort():
+    sched = FaultSchedule.parse("5:server_up:1,2:server_down:1,3:arrive:4")
+    assert [ev.cycle for ev in sched] == [2, 3, 5]       # sorted
+    assert sched.events[0] == GraphEvent(2, EVENT_SERVER_DOWN, server=1,
+                                         scale=0.5)
+    assert sched.events[1] == GraphEvent(3, EVENT_ARRIVE, count=4)
+    assert len(sched) == 3
+    assert sched == FaultSchedule.parse("2:server_down:1,3:arrive:4,"
+                                        "5:server_up:1")
+
+
+def test_schedule_parse_defaults_and_degrade_scale():
+    sched = FaultSchedule.parse("1:arrive,2:depart,3:degrade:2:0.25")
+    assert sched.events[0].count == 1                    # user default arg
+    assert sched.events[1].count == 1
+    ev = sched.events[2]
+    assert (ev.server, ev.scale) == (2, 0.25)
+
+
+def test_schedule_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown event kind"):
+        FaultSchedule([GraphEvent(0, "reboot")])
+    with pytest.raises(ValueError, match="bad fault item"):
+        FaultSchedule.parse("nonsense")
+
+
+def test_schedule_random_is_deterministic_and_consistent():
+    a = FaultSchedule.random(7, cycles=40, num_servers=4)
+    b = FaultSchedule.random(7, cycles=40, num_servers=4)
+    assert a == b
+    assert a != FaultSchedule.random(8, cycles=40, num_servers=4)
+    # downs and ups alternate per server: a server never goes down twice
+    # without recovering in between
+    down = set()
+    for ev in a.server_events():
+        if ev.kind == EVENT_SERVER_DOWN:
+            assert ev.server not in down
+            down.add(ev.server)
+        elif ev.kind == EVENT_SERVER_UP:
+            assert ev.server in down
+            down.discard(ev.server)
+
+
+def test_schedule_views_partition_the_events():
+    sched = FaultSchedule.parse("1:server_down:0,1:arrive:2,4:server_up:0")
+    assert [ev.kind for ev in sched.user_events()] == [EVENT_ARRIVE]
+    assert [ev.kind for ev in sched.server_events()] == [EVENT_SERVER_DOWN,
+                                                         EVENT_SERVER_UP]
+    assert len(sched.events_at(1)) == 2 and not sched.events_at(3)
+
+
+# -- ServerProfile / degrade_network -----------------------------------------
+
+def test_degrade_network_down_server_unreachable():
+    _, net, _ = scenario()
+    m = int(net.f_k.shape[0])
+    prof = costs.ServerProfile.healthy(m)
+    prof = prof._replace(up=prof.up.at[1].set(0.0))
+    deg = costs.degrade_network(net, prof)
+    assert float(deg.capacity[1]) == 0.0
+    assert np.all(np.asarray(deg.B_im)[:, 1] == 0.0)     # no uplink to it
+    assert np.all(np.asarray(deg.eta_kl)[1, :] == 0.0)   # no backhaul
+    assert np.all(np.asarray(deg.eta_kl)[:, 1] == 0.0)
+    # healthy servers keep their base pricing
+    keep = [k for k in range(m) if k != 1]
+    np.testing.assert_array_equal(np.asarray(deg.capacity)[keep],
+                                  np.asarray(net.capacity)[keep])
+
+
+def test_degrade_network_scales_compute_and_energy():
+    _, net, _ = scenario()
+    m = int(net.f_k.shape[0])
+    prof = costs.ServerProfile.healthy(m)
+    prof = prof._replace(compute_scale=prof.compute_scale.at[0].set(0.5),
+                         capacity_scale=prof.capacity_scale.at[0].set(0.5),
+                         energy_scale=prof.energy_scale.at[0].set(2.0))
+    deg = costs.degrade_network(net, prof)
+    np.testing.assert_allclose(float(deg.f_k[0]),
+                               max(float(net.f_k[0]) * 0.5, 1.0))
+    np.testing.assert_allclose(float(deg.capacity[0]),
+                               float(net.capacity[0]) * 0.5)
+    # zeta broadcast to arrays, energy doubled on the degraded sender only
+    zim = np.broadcast_to(np.asarray(net.zeta_im, np.float32), (m,))
+    np.testing.assert_allclose(np.asarray(deg.zeta_im)[0], zim[0] * 2.0,
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(deg.zeta_im)[1:], zim[1:],
+                               rtol=1e-6)
+    assert np.asarray(deg.zeta_kl).shape == (m, m)
+
+
+def test_offload_avoids_down_server():
+    """The jitted greedy scheduler must never place a user on a
+    zero-capacity (down) server — the ``done_m`` reset covers servers that
+    are full *from step 0*."""
+    state, net, _ = scenario()
+    m = int(net.f_k.shape[0])
+    prof = costs.ServerProfile.healthy(m)
+    prof = prof._replace(up=prof.up.at[2].set(0.0))
+    deg = costs.degrade_network(net, prof)
+    ctrl = GraphEdgeController(net=deg, policy="greedy_jit",
+                               partitioner="hicut_jax")
+    decision = ctrl.step(state)
+    servers = np.asarray(decision.servers)
+    active = np.asarray(state.mask) > 0
+    assert not np.any(servers[active] == 2), \
+        "user offloaded to a down server"
+    assert np.all(servers[active] >= 0)
+
+
+# -- FaultInjector -----------------------------------------------------------
+
+def test_injector_down_up_restores_healthy_pricing():
+    state, net, _ = scenario()
+    m = int(net.f_k.shape[0])
+    sched = FaultSchedule.parse("1:server_down:1,3:degrade:0:0.5,"
+                                "5:server_up:1,5:server_up:0")
+    inj = FaultInjector(sched, net)
+    up1 = inj.poll(1)
+    assert up1.num_up == m - 1 and up1.net is not None
+    assert float(up1.net.capacity[1]) == 0.0
+    up3 = inj.poll(3)
+    assert up3.num_up == m - 1
+    np.testing.assert_allclose(float(up3.net.capacity[0]),
+                               float(net.capacity[0]) * 0.5)
+    up5 = inj.poll(5)
+    assert up5.num_up == m
+    healthy = costs.degrade_network(net, costs.ServerProfile.healthy(m))
+    assert network_digest(up5.net) == network_digest(healthy)
+
+
+def test_injector_cursor_applies_skipped_cycles_once():
+    state, net, _ = scenario()
+    sched = FaultSchedule.parse("1:arrive:3,2:depart:1,6:arrive:2")
+    inj = FaultInjector(sched, net, state=state, seed=0)
+    assert inj.poll(0) is None
+    upd = inj.poll(4)            # clock skipped 1..4: both events apply
+    assert [ev.cycle for ev in upd.events] == [1, 2]
+    assert upd.net is None and upd.state is not None
+    assert inj.poll(5) is None   # nothing due, nothing re-applied
+    upd6 = inj.poll(6)
+    assert [ev.cycle for ev in upd6.events] == [6]
+    assert len(inj.applied) == 3
+
+
+def test_injector_user_churn_is_seed_deterministic():
+    state, net, _ = scenario()
+    sched = FaultSchedule.parse("1:arrive:4,2:depart:2,3:arrive:1")
+    outs = []
+    for _ in range(2):
+        inj = FaultInjector(sched, net, state=state, seed=11)
+        for c in range(4):
+            inj.poll(c)
+        outs.append(inj.state)
+    for a, b in zip(outs[0], outs[1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- engine: network-keyed plan cache + drain-then-swap ----------------------
+
+def test_plan_cache_missed_after_network_swap_and_restored():
+    """Regression for the stale-plan bug: entries keyed only on
+    (topology, assignment) survived capacity changes. The network digest
+    in the key makes a swap miss, and swapping the original network back
+    hits the old entry again."""
+    state, net, rng = scenario()
+    engine = make_engine(net)
+    _, e0, hit0 = engine.decide_entry(state)
+    _, e1, hit1 = engine.decide_entry(state)
+    assert not hit0 and hit1 and e1 is e0
+
+    m = int(net.f_k.shape[0])
+    prof = costs.ServerProfile.healthy(m)
+    prof = prof._replace(up=prof.up.at[1].set(0.0))
+    engine.swap_network(costs.degrade_network(net, prof))
+    _, e2, hit2 = engine.decide_entry(state)
+    assert not hit2 and e2.key != e0.key                 # repriced → rebuilt
+    assert engine.net_swaps == 1
+
+    engine.swap_network(net)                             # server recovered
+    _, e3, hit3 = engine.decide_entry(state)
+    assert hit3 and e3 is e0                             # old pricing aliases
+
+
+def test_engine_drain_then_swap_matches_per_phase_oracles():
+    """Mid-stream server-down: every request before the fault must equal a
+    fresh engine on the base network bitwise; every request after it must
+    equal a fresh engine on the degraded network bitwise. Nothing lost,
+    order preserved."""
+    state, net, rng = scenario()
+    m = int(net.f_k.shape[0])
+    xs = [rng.normal(size=(state.capacity, 8)).astype(np.float32)
+          for _ in range(5)]
+    reqs = [ServeRequest(state, x) for x in xs]
+
+    sched = FaultSchedule.parse("2:server_down:1")
+    inj = FaultInjector(sched, net)
+    results = make_engine(net).serve_all(reqs, faults=inj)
+    assert [r.step for r in results] == [0, 1, 2, 3, 4]  # none lost
+
+    prof = costs.ServerProfile.healthy(m)
+    deg = costs.degrade_network(net, prof._replace(up=prof.up.at[1].set(0.0)))
+    base_oracle = make_engine(net).serve_all(reqs[:2])
+    deg_oracle = make_engine(deg).serve_all(reqs[2:])
+    for got, want in zip(results[:2], base_oracle):
+        np.testing.assert_array_equal(got.output, want.output)
+        np.testing.assert_array_equal(np.asarray(got.decision.servers),
+                                      np.asarray(want.decision.servers))
+    for got, want in zip(results[2:], deg_oracle):
+        np.testing.assert_array_equal(got.output, want.output)
+        np.testing.assert_array_equal(np.asarray(got.decision.servers),
+                                      np.asarray(want.decision.servers))
+    active = np.asarray(state.mask) > 0
+    for r in results[2:]:
+        assert not np.any(np.asarray(r.decision.servers)[active] == 1)
+
+
+# -- frontend: migration ledger + deterministic trace ------------------------
+
+def _faulted_frontend_run(spec="2:server_down:1,5:server_up:1", count=12):
+    state, net, _ = scenario()
+    engine = make_engine(net)
+    inj = FaultInjector(FaultSchedule.parse(spec), net, seed=0)
+    fe = StreamingFrontend(engine=engine, clock=ManualClock(tick_per_now=0.02),
+                           faults=inj, max_batch=4)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((state.capacity, 8)).astype(np.float32)
+    wl = poisson_workload(np.random.default_rng(1), rate=5.0, count=count,
+                          make_request=lambda i: StreamRequest(state=state,
+                                                               x=x))
+    results = fe.run(wl)
+    return fe, results
+
+
+def test_frontend_migration_conserves_requests():
+    fe, results = _faulted_frontend_run()
+    stats = fe.stats
+    assert stats.conservation_ok
+    assert stats.submitted == 12 and stats.served == len(results) == 12
+    assert stats.requests_migrated > 0                   # fault hit the queue
+    assert stats.migrated_served == stats.requests_migrated  # none lost
+    assert stats.migrated == 0 and stats.deferred == 0   # fully drained
+    assert fe.engine.net_swaps == 2
+    for rec in fe.fault_trace:
+        assert rec["recovery_cycles"] >= 1               # always recovered
+        assert rec["migrated"] == rec["queued"]
+
+
+def test_frontend_fault_trace_and_outputs_deterministic():
+    """Same seed + same schedule ⇒ identical migration trace and
+    bitwise-identical served outputs (the acceptance contract)."""
+    fe_a, res_a = _faulted_frontend_run()
+    fe_b, res_b = _faulted_frontend_run()
+    assert fe_a.fault_trace == fe_b.fault_trace
+    assert fe_a.stats.as_dict() == fe_b.stats.as_dict()
+    a = {r.rid: r.output for r in res_a}
+    b = {r.rid: r.output for r in res_b}
+    assert a.keys() == b.keys()
+    for rid in a:
+        np.testing.assert_array_equal(a[rid], b[rid])
+
+
+def test_frontend_without_faults_keeps_legacy_invariant():
+    fe, results = _faulted_frontend_run(spec="", count=6)
+    # empty spec parses to an empty schedule: no events, no migrations
+    assert fe.stats.requests_migrated == 0
+    assert fe.stats.migrated == 0
+    assert fe.stats.conservation_ok
+    assert not fe.fault_trace and fe.engine.net_swaps == 0
+
+
+# -- warm-started multilevel re-cut ------------------------------------------
+
+def _cut_weight(edges, assign):
+    a = assign[edges[:, 0]]
+    b = assign[edges[:, 1]]
+    return int(np.sum((a >= 0) & (b >= 0) & (a != b)))
+
+
+def test_multilevel_warm_start_respects_capacity_and_k():
+    state, _, rng = scenario(capacity=48, users=40)
+    from repro.core.api import state_edges
+    edges = state_edges(state)
+    active = np.asarray(state.mask) > 0
+    n = state.capacity
+    cold = multilevel_partition(n, edges, 4, active=active)
+    # shrink to 3 parts warm-started from the 4-part cut (server down)
+    warm = multilevel_partition(n, edges, 3, active=active, initial=cold)
+    assert np.all(warm[active] >= 0) and np.all(warm[active] < 3)
+    assert np.all(warm[~active] == -1)
+    na = int(active.sum())
+    cap = int(np.ceil(1.1 * na / 3.0))
+    counts = np.bincount(warm[active], minlength=3)
+    assert np.all(counts <= cap), (counts, cap)
+    # deterministic
+    again = multilevel_partition(n, edges, 3, active=active, initial=cold)
+    np.testing.assert_array_equal(warm, again)
+
+
+def test_multilevel_warm_start_refines_not_degrades():
+    """Warm refinement from a same-k previous cut never produces a worse
+    edge cut than the seed it started from."""
+    state, _, rng = scenario(capacity=48, users=40)
+    from repro.core.api import state_edges
+    edges = state_edges(state)
+    active = np.asarray(state.mask) > 0
+    n = state.capacity
+    cold = multilevel_partition(n, edges, 4, active=active)
+    warm = multilevel_partition(n, edges, 4, active=active, initial=cold)
+    assert _cut_weight(edges, warm) <= _cut_weight(edges, cold)
+
+
+def test_recut_warm_installs_into_partition_cache():
+    state, net, _ = scenario()
+    ctrl = GraphEdgeController(net=net, policy="greedy_jit",
+                               partitioner="hicut_jax")
+    first = ctrl.step(state)                 # hicut cut now cached
+    ctrl.invalidate_partitions()
+    part = ctrl.recut_warm(state, np.asarray(first.partition.subgraph),
+                           num_parts=3)
+    assert part.method == "multilevel_warm"
+    hits_before = ctrl.cache_hits
+    after = ctrl.step(state)                 # must reuse the warm cut
+    assert ctrl.cache_hits == hits_before + 1
+    assert after.partition.method == "multilevel_warm"
+    np.testing.assert_array_equal(np.asarray(after.partition.subgraph),
+                                  np.asarray(part.subgraph))
+
+
+# -- CLI (slow lane) ---------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_stream_faults_cli():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_stream", "--devices", "2",
+         "--users", "16", "--count", "12", "--arrival-rate", "40",
+         "--deadline", "0", "--admission", "admit_all", "--max-batch", "2",
+         "--faults", "1:server_down:1,2:arrive:3,4:server_up:1"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "conservation=ok" in out.stdout
+    assert "faults:" in out.stdout and "net_swaps=2" in out.stdout

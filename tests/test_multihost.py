@@ -197,6 +197,52 @@ def test_sharded_plan_cache_hits_on_same_topology(rng):
     assert hit2 and k2 == k1 and shard2 is shard and fwd2 is fwd
 
 
+def test_sharded_plan_cache_evicts_lru(rng):
+    """A size-2 cache over 3 topologies evicts the least recently used
+    shard: re-requesting the evictee is a miss that rebuilds (fresh shard
+    object), while the survivors still hit, and currsize never exceeds
+    the bound."""
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("servers",))
+    cache = ShardedPlanCache(mesh, "servers", size=2)
+    topos = [graph(np.random.default_rng(i), devices=1) for i in range(3)]
+    shards = []
+    for edges, assign in topos:
+        _, shard, _, hit = cache.entry(edges, assign, 1)
+        assert not hit
+        shards.append(shard)
+    # topo0 was LRU when topo2 arrived → evicted; topo1/topo2 resident
+    info = cache.info()
+    assert info.currsize == 2 and info.maxsize == 2
+    _, s1, _, hit1 = cache.entry(*topos[1], 1)
+    _, s2, _, hit2 = cache.entry(*topos[2], 1)
+    assert hit1 and s1 is shards[1]
+    assert hit2 and s2 is shards[2]
+    _, s0, _, hit0 = cache.entry(*topos[0], 1)
+    assert not hit0 and s0 is not shards[0]       # rebuilt after eviction
+    assert cache.info().currsize == 2
+
+
+def test_plan_shard_key_sensitive_to_active_mask(rng):
+    """The digest must change when vertices go inactive (``assign = -1``)
+    or when their incident edges are dropped — otherwise a fault-churned
+    layout could alias a stale cached shard."""
+    edges, assign = graph(rng, inactive_frac=0.0)
+    base = plan_shard_key(edges, assign, 4, "pair")
+    # deactivating one vertex changes the key
+    off = assign.copy()
+    off[3] = -1
+    assert plan_shard_key(edges, off, 4, "pair") != base
+    # dropping that vertex's edges (same assignment) also changes the key
+    keep = ~np.any(edges == 3, axis=1)
+    assert keep.sum() < len(edges)                # the vertex had edges
+    assert plan_shard_key(edges[keep], assign, 4, "pair") != base
+    # and the two churned layouts do not alias each other
+    assert plan_shard_key(edges[keep], off, 4, "pair") != \
+        plan_shard_key(edges, off, 4, "pair")
+
+
 # -- multi-process parity sweep (slow lane) -----------------------------------
 
 _WORKER = textwrap.dedent("""
